@@ -1,0 +1,48 @@
+"""Paper Figure 8: context-management strategies vs compute budget on the
+synthetic multi-hop search environment (BrowseComp analogue)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.agents import (DiscardAll, Hierarchical, KeepRecentK,
+                          NoManagement, make_env, run_episode,
+                          scripted_agent)
+
+STRATEGIES = [
+    ("none", lambda: NoManagement()),
+    ("keep-recent-5", lambda: KeepRecentK(5)),
+    ("discard-all-40k", lambda: DiscardAll(40_000)),
+    ("hierarchical (GLM-5)", lambda: Hierarchical(5, 40_000)),
+]
+
+BUDGETS = [4_000_000, 8_000_000, 16_000_000]
+
+
+def run(episodes: int = 30):
+    agent = functools.partial(scripted_agent, r_tokens=1500)
+    rows = []
+    for budget in BUDGETS:
+        for name, mk in STRATEGIES:
+            t0 = time.time()
+            wins, restarts = 0, 0
+            r = np.random.default_rng(42)
+            for _ in range(episodes):
+                hops = int(r.integers(60, 200))
+                env = make_env(r, hops=hops, obs_tokens=5000,
+                               degrade_start=60_000)
+                env.degrade_scale = 150_000
+                ok, stats = run_episode(env, agent, mk(),
+                                        budget_tokens=budget,
+                                        max_rounds=600)
+                wins += ok
+                restarts += stats["restarts"]
+            rows.append({
+                "name": f"context_mgmt/{name}@{budget//1000}k",
+                "us_per_call": (time.time() - t0) / episodes * 1e6,
+                "derived": f"accuracy={wins/episodes:.2f} "
+                           f"restarts={restarts/episodes:.1f}",
+            })
+    return rows

@@ -1,0 +1,47 @@
+"""§Roofline deliverable: per (arch × shape × mesh) table from the dry-run
+JSONs (experiments/dryrun/*.json).  Run the dry-run first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod-too
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(str(OUT / "*.json"))):
+        r = json.load(open(f))
+        r["_file"] = Path(f).stem
+        recs.append(r)
+    return recs
+
+
+def run(**kw):
+    rows = []
+    for r in load_records():
+        if r.get("_file", "").endswith(("_rg1", "_rg4", "_unroll")):
+            continue   # perf-iteration artifacts, reported in §Perf
+        if r.get("status") == "skipped":
+            rows.append({"name": f"roofline/{r['arch']}/{r['shape']}/"
+                                 f"{r['mesh']}", "us_per_call": 0.0,
+                         "derived": f"SKIPPED: {r['reason'][:60]}"})
+            continue
+        if r.get("status") != "ok":
+            continue
+        hbm = (r["argument_bytes"] + r["temp_bytes"]) / 2 ** 30
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            "us_per_call": r["compute_s"] * 1e6,
+            "derived": (f"dominant={r['dominant']} "
+                        f"compute={r['compute_s']:.3f}s "
+                        f"memory={r['memory_s']:.3f}s "
+                        f"collective={r['collective_s']:.3f}s "
+                        f"useful={r['useful_ratio']:.2f} "
+                        f"hbm={hbm:.1f}GiB"),
+        })
+    return rows

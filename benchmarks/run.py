@@ -1,0 +1,62 @@
+"""Benchmark harness — one suite per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only SUITE] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = [
+    ("attention_variants", "Table 1: GQA-8 vs MLA/Muon-Split/MLA-256"),
+    ("mtp_accept", "Table 2: MTP accept length (shared vs single)"),
+    ("dsa_longcontext", "Table 3/6 + Fig 6: DSA retrofit recipe"),
+    ("attn_ablation", "Table 5: SWA/GDN/SimpleGDN ablation"),
+    ("context_mgmt", "Figure 8: context management strategies"),
+    ("rl_async", "S3.6/S4.1: async RL infra"),
+    ("pd_disagg", "S3.6.2: PD disaggregation tail latency"),
+    ("roofline_report", "SRoofline: dry-run derived terms"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer steps/episodes (CI mode)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            kw = {}
+            if args.fast:
+                import inspect
+                sig = inspect.signature(mod.run)
+                if "steps" in sig.parameters:
+                    kw["steps"] = 16
+                if "episodes" in sig.parameters:
+                    kw["episodes"] = 8
+            rows = mod.run(**kw)
+            for r in rows:
+                derived = str(r["derived"]).replace(",", ";")
+                print(f"{r['name']},{r['us_per_call']:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod_name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} suite failures: {failures}",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

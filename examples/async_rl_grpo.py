@@ -1,0 +1,100 @@
+"""Asynchronous multi-task agent RL (GLM-5 §4.1), end to end on CPU.
+
+Two decoupled rollout engines (bf16 inference numerics) generate
+trajectories for TWO registered task services through the TITO gateway and
+the DP-aware router; the trainer consumes staleness-filtered GRPO groups
+with the Direct Double-sided-IS objective, pushing weights back every K
+updates (optimizer reset on push).  Reward on the verifiable copy/reverse
+tasks improves within a couple of minutes.
+
+  PYTHONPATH=src python examples/async_rl_grpo.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.async_rl import (AsyncTrainer, Orchestrator, RolloutEngine,
+                            TaskService)
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.rl.rewards import prefix_reward
+
+SEP = 1
+PLEN = 4
+
+
+def make_tasks(cfg):
+    # both prompts are exactly PLEN+1 tokens (task marker differs) so the
+    # trainer's fixed prompt_pad matches the rollout view token-for-token
+    def sample_copy(rng):
+        x = rng.integers(3, cfg.vocab_size, size=PLEN - 1)
+        return {"prompt": np.concatenate([x, [SEP, 2]]).astype(np.int32),
+                "answer": x}
+
+    def sample_reverse(rng):
+        x = rng.integers(3, cfg.vocab_size, size=PLEN - 1)
+        return {"prompt": np.concatenate([x, [SEP, SEP]]).astype(np.int32),
+                "answer": x[::-1].copy()}
+
+    def reward(problem, gen):
+        return prefix_reward(gen[:len(problem["answer"])],
+                             problem["answer"]), False
+
+    return [TaskService("copy", sample_copy, reward, max_new=PLEN - 1,
+                        ratio=0.6),
+            TaskService("reverse", sample_reverse, reward, max_new=PLEN - 1,
+                        ratio=0.4)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="rl-mini", family="dense", num_layers=2,
+                      d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=16, max_seq_len=64, dsa=None,
+                      q_chunk=0, loss_chunk=0)
+    model = get_model(cfg)
+    params, specs = model.init(jax.random.key(0), cfg)
+
+    engines = [RolloutEngine(cfg, params, seed=i)
+               for i in range(args.engines)]
+    orch = Orchestrator(engines, group_size=8, staleness_tau=4,
+                        env_failure_rate=0.02)
+    orch.buffer.max_ready = 8
+    for t in make_tasks(cfg):
+        orch.register(t)
+    trainer = AsyncTrainer(cfg, params, specs, engines=engines, lr=1e-3,
+                           push_every=1)
+    orch.start(n_workers=args.workers)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        if not orch.wait_for_groups(2, timeout_s=120):
+            print("rollout stall; worker errors:", orch.worker_errors[:1])
+            break
+        groups = orch.buffer.pop_groups(2, trainer.version)
+        if not groups:
+            continue
+        m = trainer.train_on(groups, pad_to=PLEN - 1, prompt_pad=PLEN + 1)
+        if step % 20 == 0:
+            print(f"step {step:4d} reward={m['mean_reward']:.3f} "
+                  f"kept={m['kept']:.2f} v={m['version']} "
+                  f"({time.time()-t0:.0f}s)")
+    orch.stop()
+    rew = [h["mean_reward"] for h in trainer.history]
+    print("\nbuffer stats:", orch.buffer.stats)
+    print("router: kv_reuse =",
+          orch.router.stats["reused_tokens"],
+          "tokens; rebalances =", orch.router.stats["rebalances"])
+    print(f"reward: first20={np.mean(rew[:20]):.3f} "
+          f"last20={np.mean(rew[-20:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end training driver (deliverable b): trains a GLM-5-family model
+on the synthetic corpus with the full production stack — data pipeline with
+prefetch, Muon-Split, mesh sharding, async checkpointing, metrics.
+
+Default is a CPU-friendly ~3M-param mini for a quick run; ``--m100``
+switches to a ~100M-parameter configuration (same code path; expect ~hours
+on one CPU core — it is the deliverable's "train a ~100M model" driver and
+runs unmodified on real hardware):
+
+  PYTHONPATH=src python examples/train_glm5_mini.py --steps 200
+  PYTHONPATH=src python examples/train_glm5_mini.py --m100 --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--m100", action="store_true",
+                    help="~100M-param config instead of the mini")
+    ap.add_argument("--ckpt-dir", default="/tmp/glm5_mini_ckpt")
+    args = ap.parse_args()
+
+    if args.m100:
+        # ~100M params: register an inline config via monkey-free path —
+        # reuse glm-5 smoke geometry scaled up
+        from repro.configs import glm5_744b
+        from repro.configs.base import DSAConfig, MLAConfig, MTPConfig
+        cfg = glm5_744b.CONFIG.replace(
+            num_layers=8, d_model=512, num_heads=8, num_kv_heads=8,
+            head_dim=96, d_ff=2048, moe_d_ff=512, vocab_size=32768,
+            num_experts=16, experts_per_token=2, first_k_dense=2,
+            max_seq_len=4096,
+            mla=MLAConfig(q_lora_dim=256, kv_lora_dim=128, qk_rope_dim=32,
+                          qk_nope_dim=64, v_head_dim=96),
+            dsa=DSAConfig(index_heads=4, index_head_dim=32, top_k=256,
+                          block_size=64),
+            mtp=MTPConfig(num_predict=3, share_params=True),
+            q_chunk=256, loss_chunk=256)
+        glm5_744b.CONFIG_100M = cfg
+        import repro.configs as C
+        # temporary registration
+        import types
+        mod = types.ModuleType("repro.configs.glm5_100m")
+        mod.CONFIG = cfg
+        mod.smoke_config = lambda: cfg
+        sys.modules["repro.configs.glm5_100m"] = mod
+        C.ARCH_IDS.append("glm5_100m")
+        argv = ["--arch", "glm5_100m", "--steps", str(args.steps),
+                "--batch", "4", "--seq", "512", "--lr", "1e-3",
+                "--ckpt-dir", args.ckpt_dir]
+    else:
+        argv = ["--arch", "glm-5", "--smoke", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "256", "--lr", "2e-3",
+                "--ckpt-dir", args.ckpt_dir]
+    train_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main()

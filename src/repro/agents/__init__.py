@@ -1,0 +1,3 @@
+from repro.agents.context_mgmt import (DiscardAll, Hierarchical, KeepRecentK,
+                                       NoManagement, Strategy, run_episode)
+from repro.agents.search_env import make_env, scripted_agent

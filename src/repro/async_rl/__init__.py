@@ -1,0 +1,7 @@
+from repro.async_rl.buffer import TrajectoryBuffer  # noqa: F401
+from repro.async_rl.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.async_rl.orchestrator import Orchestrator, TaskService  # noqa: F401
+from repro.async_rl.rollout import RolloutEngine  # noqa: F401
+from repro.async_rl.router import DPRouter, RoundRobinRouter  # noqa: F401
+from repro.async_rl.tito import TitoGateway, Trajectory, ToyTokenizer  # noqa: F401
+from repro.async_rl.trainer import AsyncTrainer  # noqa: F401

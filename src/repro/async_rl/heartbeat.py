@@ -1,0 +1,55 @@
+"""Heartbeat-driven rollout fault tolerance (GLM-5 §3.6.3).
+
+Rollout servers emit heartbeats; the monitor terminates + deregisters
+servers whose heartbeat lapses, so retries route only to healthy servers —
+a single-server incident never stalls end-to-end RL.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float = 2.0,
+                 on_evict: Optional[Callable[[str], None]] = None):
+        self.timeout_s = timeout_s
+        self._last: Dict[str, float] = {}
+        self._healthy: Dict[str, bool] = {}
+        self._lock = threading.Lock()
+        self._on_evict = on_evict
+        self.evictions: List[str] = []
+
+    def register(self, server_id: str):
+        with self._lock:
+            self._last[server_id] = time.monotonic()
+            self._healthy[server_id] = True
+
+    def beat(self, server_id: str):
+        with self._lock:
+            if self._healthy.get(server_id):
+                self._last[server_id] = time.monotonic()
+
+    def sweep(self) -> List[str]:
+        """Evict servers whose heartbeat lapsed; returns evicted ids."""
+        now = time.monotonic()
+        evicted = []
+        with self._lock:
+            for sid, ok in list(self._healthy.items()):
+                if ok and now - self._last[sid] > self.timeout_s:
+                    self._healthy[sid] = False
+                    evicted.append(sid)
+        for sid in evicted:
+            self.evictions.append(sid)
+            if self._on_evict:
+                self._on_evict(sid)
+        return evicted
+
+    def healthy_servers(self) -> List[str]:
+        with self._lock:
+            return [s for s, ok in self._healthy.items() if ok]
+
+    def is_healthy(self, server_id: str) -> bool:
+        with self._lock:
+            return self._healthy.get(server_id, False)

@@ -1,0 +1,138 @@
+"""Multi-Task Rollout Orchestrator (GLM-5 §4.1.1).
+
+Central component between the slime-style trainer and heterogeneous task
+services.  Each TASK registers rollout + reward logic as an independent
+service; the orchestrator controls per-task sampling ratios, drives worker
+threads against the rollout engines (with heartbeats + DP-aware routing),
+standardizes everything into the unified Trajectory representation, and
+feeds the staleness-filtered group buffer the trainer consumes.
+
+Fully asynchronous: rollout workers never block on the trainer; the trainer
+trains whenever enough groups are ready (§4.1.1 threshold).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.async_rl.buffer import TrajectoryBuffer
+from repro.async_rl.heartbeat import HeartbeatMonitor
+from repro.async_rl.rollout import RolloutEngine
+from repro.async_rl.router import DPRouter
+from repro.async_rl.tito import TitoGateway, Trajectory
+
+
+@dataclasses.dataclass
+class TaskService:
+    """One registered task microservice: problem sampler + reward fn."""
+    name: str
+    sample_problem: Callable[[np.random.Generator], dict]
+    # (problem, generated tokens) -> (reward, env_failure)
+    reward: Callable[[dict, np.ndarray], tuple]
+    max_new: int = 16
+    ratio: float = 1.0
+
+
+class Orchestrator:
+    def __init__(self, engines: List[RolloutEngine], *, group_size: int = 4,
+                 staleness_tau: int = 4, seed: int = 0,
+                 env_failure_rate: float = 0.0):
+        self.engines = engines
+        # unify the TITO gateway across engines: rollouts may be routed to
+        # any engine and fragments must land in one place
+        self.gateway = engines[0].gateway
+        for e in engines[1:]:
+            e.gateway = self.gateway
+        self.buffer = TrajectoryBuffer(group_size, staleness_tau)
+        self.group_size = group_size
+        self.router = DPRouter(n_ranks=len(engines))
+        self.monitor = HeartbeatMonitor(timeout_s=5.0)
+        self.tasks: Dict[str, TaskService] = {}
+        self._rng = np.random.default_rng(seed)
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._group_ids = itertools.count()
+        self.env_failure_rate = env_failure_rate
+        self.current_version = lambda: max(e.version for e in engines)
+        self.completed = 0
+        self.worker_errors: List[str] = []
+        self._lock = threading.Lock()
+
+    def register(self, task: TaskService):
+        self.tasks[task.name] = task
+
+    def _pick_task(self) -> TaskService:
+        names = list(self.tasks)
+        ratios = np.array([self.tasks[n].ratio for n in names], np.float64)
+        ratios /= ratios.sum()
+        return self.tasks[self._rng.choice(names, p=ratios)]
+
+    def set_ratio(self, name: str, ratio: float):
+        """Dynamic task-mix adjustment (paper: 'automated, dynamic
+        adjustment of task sampling ratios')."""
+        self.tasks[name].ratio = ratio
+
+    def _rollout_group(self, worker_rng: np.random.Generator):
+        """One GRPO group: G rollouts of the same problem."""
+        task = self._pick_task()
+        problem = task.sample_problem(worker_rng)
+        gkey = f"{task.name}-g{next(self._group_ids)}"
+        for _ in range(self.group_size):
+            rid = self.gateway.new_rollout(task.name)
+            rank = self.router.route(rid)
+            engine = self.engines[rank % len(self.engines)]
+            self.router.request(rid, len(problem["prompt"]))
+            gen = engine.generate(rid, problem["prompt"], task.max_new)
+            fail = bool(worker_rng.random() < self.env_failure_rate)
+            reward, env_fail = (0.0, True) if fail else task.reward(problem,
+                                                                    gen)
+            traj = self.gateway.finish(rid, task.name, problem["prompt"],
+                                       reward, env_failure=env_fail or fail)
+            self.router.finish(rid)
+            self.buffer.add(gkey, traj, self.current_version())
+        with self._lock:
+            self.completed += self.group_size
+
+    def _worker(self, wid: int):
+        sid = f"rollout-worker-{wid}"
+        self.monitor.register(sid)
+        rng = np.random.default_rng(hash(sid) % (2 ** 31))
+        while not self._stop.is_set():
+            self.monitor.beat(sid)
+            if not self.buffer.has_capacity():   # backpressure: stay fresh
+                time.sleep(0.005)
+                continue
+            try:
+                self._rollout_group(rng)
+            except Exception as e:   # noqa: BLE001 — crash => missed beats
+                import traceback
+                with self._lock:
+                    self.worker_errors.append(
+                        f"{sid}: {e}\n{traceback.format_exc()}")
+                return
+
+    def start(self, n_workers: int = 2):
+        for w in range(n_workers):
+            t = threading.Thread(target=self._worker, args=(w,), daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def wait_for_groups(self, n: int, timeout_s: float = 300) -> bool:
+        t0 = time.monotonic()
+        while self.buffer.n_ready() < n:
+            if time.monotonic() - t0 > timeout_s:
+                return False
+            self.monitor.sweep()
+            time.sleep(0.01)
+        return True

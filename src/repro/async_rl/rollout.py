@@ -1,0 +1,103 @@
+"""Rollout engine: versioned policy snapshots + autoregressive sampling.
+
+The inference-engine stand-in.  Holds a weight snapshot with a VERSION
+number; the trainer pushes new weights every K updates (§4.1.1).  Sampling
+runs in a numerics regime that intentionally differs from training
+(bf16 cast — the paper's FP8-rollout analogue), so rollout logprobs !=
+training logprobs and the IcePop/double-sided-IS machinery has real work.
+
+Generation can proceed mid-trajectory across a weight push — fragments
+record the version that produced them (TITO metadata), feeding the
+staleness filter.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.async_rl.tito import TitoGateway
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+
+
+class RolloutEngine:
+    def __init__(self, cfg: ModelConfig, params, *, engine_dtype=jnp.bfloat16,
+                 seed: int = 0, gateway: Optional[TitoGateway] = None):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.engine_dtype = engine_dtype
+        self._lock = threading.Lock()
+        self.version = 0
+        self._params = jax.tree.map(lambda x: x.astype(engine_dtype), params)
+        self._rng = np.random.default_rng(seed)
+        self.gateway = gateway or TitoGateway()
+        # fixed-shape step: logits at position cur_len-1 of a padded buffer
+        # (one compile for the whole run, not one per sequence length)
+        self._step = jax.jit(self._logits_fn)
+
+    def _logits_fn(self, params, tokens, cur_len):
+        logits = self.model.logits(params, tokens, self.cfg)
+        return jax.lax.dynamic_index_in_dim(logits, cur_len - 1, axis=1,
+                                            keepdims=False)[0]
+
+    def push_weights(self, params, version: int):
+        """Trainer -> inference weight sync (the NCCL broadcast stand-in)."""
+        with self._lock:
+            self._params = jax.tree.map(
+                lambda x: x.astype(self.engine_dtype), params)
+            self.version = version
+
+    def snapshot(self):
+        with self._lock:
+            return self._params, self.version
+
+    def generate(self, rollout_id: str, prompt: np.ndarray, max_new: int,
+                 *, temperature: float = 1.0, eos: int = 0,
+                 fragment_size: int = 8) -> np.ndarray:
+        """Sample ``max_new`` tokens autoregressively; records fragments
+        (tokens + rollout logprobs + weight version) through the TITO
+        gateway.  Weight pushes between fragments are picked up mid-
+        trajectory — that's the async off-policy condition."""
+        buf_len = len(prompt) + max_new
+        # round up to a small set of bucket lengths -> few compiles
+        bucket = 16
+        buf_len = ((buf_len + bucket - 1) // bucket) * bucket
+        buf = np.zeros((1, buf_len), np.int32)
+        buf[0, :len(prompt)] = prompt
+        cur = len(prompt)
+        out = []
+        frag_toks, frag_lps = [], []
+        params, version = self.snapshot()
+        for i in range(max_new):
+            if i > 0 and i % fragment_size == 0:
+                self.gateway.record(rollout_id, np.array(frag_toks),
+                                    np.array(frag_lps), version)
+                frag_toks, frag_lps = [], []
+                params, version = self.snapshot()
+            logits = np.asarray(
+                self._step(params, jnp.asarray(buf), cur), np.float32)
+            logits = logits / max(temperature, 1e-6)
+            logp = logits - _logsumexp(logits)
+            p = np.exp(logp)
+            p /= p.sum()
+            tok = int(self._rng.choice(len(logp), p=p))
+            frag_toks.append(tok)
+            frag_lps.append(float(logp[tok]))
+            out.append(tok)
+            buf[0, cur] = tok
+            cur += 1
+            if tok == eos:
+                break
+        if frag_toks:
+            self.gateway.record(rollout_id, np.array(frag_toks),
+                                np.array(frag_lps), version)
+        return np.asarray(out, np.int32)
+
+
+def _logsumexp(x: np.ndarray) -> float:
+    m = float(np.max(x))
+    return m + float(np.log(np.sum(np.exp(x - m))))

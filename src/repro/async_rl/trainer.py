@@ -1,0 +1,109 @@
+"""Asynchronous RL trainer (GLM-5 §4.1.1).
+
+Consumes trajectory groups from the buffer, computes the Direct
+Double-sided-IS loss (Eq. 3–5) on padded token batches, applies Muon/AdamW
+updates, and pushes weights to the rollout engines every ``push_every``
+gradient steps — RESETTING THE OPTIMIZER after each push, as the paper does
+("the weight update considers a different optimization problem due to the
+changing rollout policy").
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.async_rl.rollout import RolloutEngine
+from repro.async_rl.tito import Trajectory
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.models.losses import token_logprobs
+from repro.optim import muon
+from repro.rl.async_is import async_is_loss
+from repro.rl.grpo import group_advantages
+
+
+def pack_groups(groups: List[List[Trajectory]], pad_to: int,
+                prompt_pad: int) -> Dict[str, np.ndarray]:
+    """Flatten groups to fixed-size arrays for the jitted loss."""
+    trajs = [t for g in groups for t in g]
+    B = len(trajs)
+    tokens = np.zeros((B, prompt_pad + pad_to), np.int32)
+    lp_roll = np.zeros((B, pad_to), np.float32)
+    mask = np.zeros((B, pad_to), np.float32)
+    rewards = np.zeros((len(groups), len(groups[0])), np.float32)
+    for i, t in enumerate(trajs):
+        p = t.prompt[-prompt_pad:]
+        tokens[i, prompt_pad - len(p):prompt_pad] = p
+        n = min(len(t.tokens), pad_to)
+        tokens[i, prompt_pad:prompt_pad + n] = t.tokens[:n]
+        lp_roll[i, :n] = t.logprobs[:n]
+        mask[i, :n] = 1.0
+        if t.loss_mask is not None:
+            mask[i, :n] *= t.loss_mask[:n]
+    for gi, g in enumerate(groups):
+        for si, t in enumerate(g):
+            rewards[gi, si] = t.reward
+    return {"tokens": tokens, "lp_rollout": lp_roll, "mask": mask,
+            "rewards": rewards, "prompt_pad": prompt_pad}
+
+
+class AsyncTrainer:
+    def __init__(self, cfg: ModelConfig, params, specs, *,
+                 engines: List[RolloutEngine], lr: float = 1e-3,
+                 push_every: int = 4, eps_low: float = 0.2,
+                 eps_high: float = 0.2, muon_split: bool = True):
+        self.cfg = cfg
+        self.model = get_model(cfg)
+        self.params = params
+        self.specs = specs
+        self.engines = engines
+        self.lr = lr
+        self.push_every = push_every
+        self.version = 0
+        self.opt_state = muon.init(params)
+        self.muon_split = muon_split
+        self.eps = (eps_low, eps_high)
+        self.history: List[dict] = []
+        self._jit_step = jax.jit(self._step, static_argnums=(6,))
+
+    def _step(self, params, opt_state, tokens, lp_rollout, mask, adv,
+              prompt_pad: int):
+        def loss_fn(p):
+            logits = self.model.logits(p, tokens, self.cfg)
+            # logprob of generated token t is read at position t-1
+            gen = tokens[:, prompt_pad:]
+            lp_all = token_logprobs(logits[:, prompt_pad - 1:-1], gen)
+            st = async_is_loss(lp_all, lp_rollout, adv, mask,
+                               eps_low=self.eps[0], eps_high=self.eps[1])
+            return st.loss, st
+        (loss, st), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = muon.global_norm_clip(grads, 1.0)
+        params, opt_state = muon.update(params, grads, self.specs, opt_state,
+                                        lr=self.lr, cfg=self.cfg,
+                                        split=self.muon_split)
+        return params, opt_state, {"loss": loss, "kept": st.kept_frac,
+                                   "ratio": st.mean_ratio,
+                                   "grad_norm": gnorm}
+
+    def train_on(self, groups: List[List[Trajectory]], *,
+                 pad_to: int = 16, prompt_pad: int = 16) -> dict:
+        batch = pack_groups(groups, pad_to, prompt_pad)
+        adv = group_advantages(jnp.asarray(batch["rewards"])).reshape(-1)
+        self.params, self.opt_state, metrics = self._jit_step(
+            self.params, self.opt_state, jnp.asarray(batch["tokens"]),
+            jnp.asarray(batch["lp_rollout"]), jnp.asarray(batch["mask"]),
+            adv, prompt_pad)
+        self.version += 1
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["version"] = self.version
+        metrics["mean_reward"] = float(batch["rewards"].mean())
+        self.history.append(metrics)
+        if self.version % self.push_every == 0:
+            for e in self.engines:
+                e.push_weights(self.params, self.version)
+            # paper: reset optimizer after each inference-engine weight push
+            self.opt_state = muon.init(self.params)
+        return metrics

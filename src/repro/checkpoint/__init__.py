@@ -1,0 +1,1 @@
+from repro.checkpoint.io import latest_step_dir, restore, save, save_async  # noqa: F401

@@ -1,0 +1,173 @@
+"""Model/run configuration system.
+
+Every assigned architecture gets a module in ``repro.configs`` exposing
+``CONFIG`` (full-size, dry-run only) and ``smoke_config()`` (reduced, runnable
+on CPU).  Configs are plain dataclasses so they can be constructed from CLI
+flags, and every field maps 1:1 to a paper/model-card quantity (cited in each
+arch module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class DSAConfig:
+    """DeepSeek Sparse Attention (GLM-5 §2.1.1).
+
+    ``index_heads``/``index_head_dim`` follow GLM-5 Table 10 (32 heads, dim 128).
+    ``top_k`` = 2048 tokens (paper §3.2: k=2048).
+    ``selector``: 'token' = paper-faithful per-token top-k gather;
+                  'block' = TPU-adapted block-granular top-k (DESIGN.md).
+    ``block_size``: key-block granularity for the 'block' selector.
+    ``deterministic_topk``: paper finds deterministic top-k required for RL
+    stability; the False setting simulates a non-deterministic kernel by
+    randomized tie-breaking (used only by the RL-determinism benchmark).
+    """
+    index_heads: int = 32
+    index_head_dim: int = 128
+    top_k: int = 2048
+    selector: str = "token"
+    block_size: int = 128
+    deterministic_topk: bool = True
+    # continued-pretraining recipe knobs (§2.1.1): warmup trains indexer only.
+    warmup_freeze_base: bool = True
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-latent attention dims (GLM-5 Table 10)."""
+    q_lora_dim: int = 2048
+    kv_lora_dim: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128       # 192 total qk head dim = 128 nope + 64 rope
+    v_head_dim: int = 256        # MLA-256 variant (paper Table 1)
+
+
+@dataclass(frozen=True)
+class MTPConfig:
+    """Multi-token prediction with parameter sharing (GLM-5 §2.1).
+
+    ``num_predict`` speculative steps all share ONE mtp layer's parameters
+    when ``share_params`` is True (the paper's contribution); False gives the
+    DeepSeek-V3-style single-layer-trained baseline.
+    """
+    num_predict: int = 3
+    share_params: bool = True
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | vlm | audio
+    citation: str = ""
+
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    max_seq_len: int = 8192
+    rope_base: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+
+    # attention flavor
+    attention_type: str = "gqa"    # gqa | mla
+    attention_pattern: Tuple[str, ...] = ("global",)  # cycled over layers
+    sliding_window: int = 0        # used by 'local' layers in the pattern
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    mlp_activation: str = "swiglu"  # swiglu | relu2 | gelu
+    qk_norm: bool = False
+
+    mla: Optional[MLAConfig] = None
+    dsa: Optional[DSAConfig] = None
+    mtp: Optional[MTPConfig] = None
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    first_k_dense: int = 0
+    router_aux_coef: float = 0.001
+    capacity_factor: float = 1.25
+
+    # SSM (mamba1/mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 1           # 1 = mamba1 (falcon-mamba), 2 = mamba2 (zamba2)
+    ssm_head_dim: int = 64         # mamba2 only
+
+    # hybrid (zamba2-style): one SHARED attention block applied every
+    # ``hybrid_attn_every`` ssm layers.
+    hybrid_attn_every: int = 0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0       # e.g. 1500 mel frames
+    decoder_max_len: int = 0
+
+    # modality frontend stub: 'none' | 'vision_stub' | 'audio_stub'
+    frontend: str = "none"
+    frontend_tokens: int = 0       # patches / frames provided by input_specs()
+
+    # implementation switches
+    attn_impl: str = "xla"         # xla | pallas
+    moe_impl: str = "auto"         # auto | dense | expert_parallel
+    scan_layers: bool = True
+    remat: str = "none"            # none | full | offload-style policy name
+    remat_group: int = 1           # checkpoint every G layer-groups (tape/G)
+    seq_parallel: bool = False     # Megatron-SP-style sequence sharding of
+    # the residual stream over 'model' between blocks (beyond-paper opt)
+    q_chunk: int = 1024            # query chunking for xla attention
+    loss_chunk: int = 512          # sequence-chunked CE (§2.4.1)
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 8
+    seq_len: int = 512
+    learning_rate: float = 2e-4
+    min_lr: float = 4e-5
+    warmup_steps: int = 20
+    total_steps: int = 200
+    optimizer: str = "muon"        # muon | adamw
+    muon_split: bool = True        # per-head orthogonalization (GLM-5 §2.1)
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned (seq_len, global_batch) workload shapes."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,4 @@
+"""GLM-5's separable contributions: DSA sparse attention, MLA(-256),
+MTP with parameter sharing.  (Muon Split lives in repro.optim.muon; the
+async-RL system in repro.rl / repro.async_rl.)"""
+from repro.core import dsa, mla, mtp  # noqa: F401

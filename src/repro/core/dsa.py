@@ -1,0 +1,304 @@
+"""DSA — DeepSeek Sparse Attention, as adopted by GLM-5 (§2.1.1, §3.2).
+
+Three components:
+
+1. **Lightning indexer** — a small multi-head scorer.  For query token t and
+   key token s:  I[t,s] = Σ_h w_h(x_t) · ReLU(q_h(x_t) · k(x_s)), where the
+   key projection is shared across indexer heads and per-head weights w_h are
+   query-dependent.  Linear in sequence length per query; the Pallas kernel
+   (``repro.kernels.lightning_indexer``) fuses score+ReLU+head-sum.
+
+2. **Top-k token selection** (k=2048).  ``deterministic=True`` uses
+   ``jax.lax.top_k`` (stable, deterministic — the property GLM-5 found
+   *necessary for RL stability*; torch.topk analogue).  ``False`` simulates
+   the non-deterministic CUDA/TileLang kernels by randomized tie-breaking —
+   only the RL-determinism benchmark uses it.
+
+3. **Sparse attention** over the selected tokens.  Two selectors:
+   * ``token``  — paper-faithful per-token gather;
+   * ``block``  — TPU adaptation (DESIGN.md): indexer scores are pooled over
+     128-token key blocks and 128-query blocks; top k/block_size *blocks* are
+     selected per query block and gathered contiguously (MXU/DMA friendly).
+
+The indexer can be trained standalone (warm-up stage: KL to the dense
+attention distribution, base frozen) via ``indexer_distill_loss``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DSAConfig, ModelConfig
+from repro.layers.attention import NEG_INF, attention_mask
+from repro.sharding.rules import Builder
+
+
+# ---------------------------------------------------------------------------
+# indexer
+# ---------------------------------------------------------------------------
+
+def build_indexer(b: Builder, cfg: ModelConfig):
+    d = cfg.dsa
+    D = cfg.d_model
+    b.param("wq_idx", (D, d.index_heads * d.index_head_dim),
+            ("embed_fsdp", "index_heads"))
+    b.param("wk_idx", (D, d.index_head_dim), ("embed_fsdp", None))
+    b.param("w_head", (D, d.index_heads), ("embed", None), scale=0.02)
+
+
+def indexer_keys(params, x_kv: jax.Array, dsa: DSAConfig) -> jax.Array:
+    """x_kv (B,T,D) -> k_idx (B,T,Di).  Cached during decode."""
+    return x_kv @ params["wk_idx"]
+
+
+def indexer_scores(params, x_q: jax.Array, k_idx: jax.Array,
+                   dsa: DSAConfig) -> jax.Array:
+    """x_q (B,S,D), k_idx (B,T,Di) -> scores (B,S,T) (fp32)."""
+    B, S, _ = x_q.shape
+    q = (x_q @ params["wq_idx"]).reshape(B, S, dsa.index_heads,
+                                         dsa.index_head_dim)
+    w = jax.nn.softmax((x_q @ params["w_head"]).astype(jnp.float32), -1)
+    dots = jnp.einsum("bshd,btd->bsht", q.astype(jnp.float32),
+                      k_idx.astype(jnp.float32))
+    dots = jax.nn.relu(dots) * (dsa.index_head_dim ** -0.5)
+    return jnp.einsum("bsht,bsh->bst", dots, w)
+
+
+def indexer_distill_loss(scores: jax.Array, attn_probs: jax.Array,
+                         mask: jax.Array) -> jax.Array:
+    """Warm-up loss: KL(attn || softmax(scores)) per query, head-averaged.
+
+    ``attn_probs`` (B,S,T) is the head-mean dense attention distribution of
+    the frozen base model; ``mask`` (B,S,T) the causal validity mask.
+    """
+    logp = jax.nn.log_softmax(jnp.where(mask, scores, NEG_INF), axis=-1)
+    p = jnp.where(mask, attn_probs, 0.0)
+    kl = jnp.sum(p * (jnp.log(jnp.clip(p, 1e-20)) - logp), axis=-1)
+    denom = jnp.maximum(mask.any(-1).sum(), 1)
+    return jnp.sum(jnp.where(mask.any(-1), kl, 0.0)) / denom
+
+
+# ---------------------------------------------------------------------------
+# top-k selection
+# ---------------------------------------------------------------------------
+
+def select_topk(scores: jax.Array, mask: jax.Array, k: int, *,
+                deterministic: bool = True,
+                noise_key: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """scores (B,S,T) + validity mask -> (idx (B,S,k), valid (B,S,k)).
+
+    ``deterministic=False`` simulates a non-deterministic top-k kernel by
+    perturbing tied scores (GLM-5 §3.2: such kernels destroyed RL stability).
+    """
+    T = scores.shape[-1]
+    k = min(k, T)
+    masked = jnp.where(mask, scores, NEG_INF)
+    if not deterministic:
+        assert noise_key is not None
+        noise = jax.random.uniform(noise_key, scores.shape, jnp.float32,
+                                   0.0, 1e-6)
+        masked = jnp.where(mask, masked + noise, NEG_INF)
+    top_vals, idx = jax.lax.top_k(masked, k)
+    return idx.astype(jnp.int32), top_vals > NEG_INF / 2
+
+
+def select_topk_blocks(scores: jax.Array, mask: jax.Array, k: int,
+                       block_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Block-granular selection (TPU adaptation).
+
+    scores/mask (B,S,T) with S divisible by block_size (queries) and T by
+    block_size (keys).  Scores are max-pooled over the query block and
+    mean+max pooled over each key block; the top (k//block_size) key blocks
+    are selected PER QUERY BLOCK.  Returns (block_idx (B,nqb,nb), valid).
+    """
+    B, S, T = scores.shape
+    qb = kb = block_size
+    nqb, nkb = S // qb, T // kb
+    nb = max(1, k // kb)
+    s = jnp.where(mask, scores, NEG_INF).reshape(B, nqb, qb, nkb, kb)
+    pooled_max = jnp.max(s, axis=(2, 4))
+    pooled_mean = jnp.mean(jnp.where(jnp.isfinite(s), s, 0.0), axis=(2, 4))
+    pooled = pooled_max + 0.5 * pooled_mean                   # (B,nqb,nkb)
+    blk_valid = mask.reshape(B, nqb, qb, nkb, kb).any((2, 4))
+    pooled = jnp.where(blk_valid, pooled, NEG_INF)
+    nb = min(nb, nkb)
+    vals, bidx = jax.lax.top_k(pooled, nb)
+    return bidx.astype(jnp.int32), vals > NEG_INF / 2
+
+
+# ---------------------------------------------------------------------------
+# sparse attention cores
+# ---------------------------------------------------------------------------
+
+def _gather_tokens(kv: jax.Array, idx: jax.Array) -> jax.Array:
+    """kv (B,T,KVH,dh), idx (B,S,K) -> (B,S,K,KVH,dh)."""
+    B, T, KVH, dh = kv.shape
+    S, K = idx.shape[1], idx.shape[2]
+    flat = kv.reshape(B, T, KVH * dh)
+    sel = jnp.take_along_axis(flat, idx.reshape(B, S * K)[..., None], axis=1)
+    return sel.reshape(B, S, K, KVH, dh)
+
+
+def sparse_token_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           idx: jax.Array, valid: jax.Array,
+                           q_positions: jax.Array, kv_positions: jax.Array,
+                           *, softcap: float = 0.0,
+                           return_probs: bool = False):
+    """Per-token gathered attention.
+
+    q (B,S,H,dh); k/v (B,T,KVH,d*); idx/valid (B,S,K).  Selected positions
+    are re-checked against causality (idx comes from masked scores, but the
+    guard keeps the op safe under padding).
+    """
+    B, S, H, dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    k_sel = _gather_tokens(k, idx)                        # (B,S,K,KVH,dh)
+    v_sel = _gather_tokens(v, idx)
+    sel_pos = jnp.take_along_axis(kv_positions, idx.reshape(B, -1), axis=1
+                                  ).reshape(idx.shape)
+    ok = valid & (sel_pos <= q_positions[..., None])
+    qg = q.reshape(B, S, KVH, G, dh)
+    scores = jnp.einsum("bsjgd,bskjd->bsjgk", qg.astype(jnp.float32),
+                        k_sel.astype(jnp.float32)) * (dh ** -0.5)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(ok[:, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bsjgk,bskjd->bsjgd", probs.astype(v.dtype), v_sel)
+    if return_probs:
+        return out.reshape(B, S, H, -1), probs.mean(axis=(2, 3))  # (B,S,K)
+    return out.reshape(B, S, H, -1)
+
+
+def sparse_block_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_idx: jax.Array, block_valid: jax.Array,
+                           q_positions: jax.Array, kv_positions: jax.Array,
+                           block_size: int, *, softcap: float = 0.0
+                           ) -> jax.Array:
+    """Block-gathered attention: every query block attends to its selected
+    key blocks (dense within blocks — MXU-aligned)."""
+    B, S, H, dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qb = block_size
+    nqb = S // qb
+    nb = block_idx.shape[-1]
+    # token indices of selected blocks: (B, nqb, nb*kb)
+    offs = jnp.arange(block_size)
+    tok_idx = (block_idx[..., None] * block_size + offs
+               ).reshape(B, nqb, nb * block_size)
+    k_sel = _gather_tokens(k, tok_idx)                    # (B,nqb,nb*kb,KVH,dh)
+    v_sel = _gather_tokens(v, tok_idx)
+    sel_pos = jnp.take_along_axis(kv_positions, tok_idx.reshape(B, -1), axis=1
+                                  ).reshape(tok_idx.shape)
+    qg = q.reshape(B, nqb, qb, KVH, G, dh)
+    qp = q_positions.reshape(B, nqb, qb)
+    ok = (block_valid[..., None, :, None].repeat(block_size, -1)
+          .reshape(B, nqb, 1, nb * block_size)
+          & (sel_pos[:, :, None, :] <= qp[..., None]))     # (B,nqb,qb,nb*kb)
+    scores = jnp.einsum("bnqjgd,bnkjd->bnjgqk", qg.astype(jnp.float32),
+                        k_sel.astype(jnp.float32)) * (dh ** -0.5)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(ok[:, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnjgqk,bnkjd->bnqjgd", probs.astype(v.dtype), v_sel)
+    return out.reshape(B, S, H, -1)
+
+
+# ---------------------------------------------------------------------------
+# full DSA attention pass (scores -> select -> sparse attend), query-chunked
+# ---------------------------------------------------------------------------
+
+def dsa_attention(idx_params, q: jax.Array, k: jax.Array, v: jax.Array,
+                  x_q: jax.Array, k_idx: jax.Array,
+                  q_positions: jax.Array, kv_positions: jax.Array,
+                  cfg: ModelConfig, *, kv_len: Optional[jax.Array] = None,
+                  window: int = 0, softcap: float = 0.0,
+                  q_chunk: int = 256, mesh=None,
+                  with_indexer_loss: bool = False):
+    """End-to-end sparse attention (used in train/prefill and decode).
+
+    ``x_q`` are the pre-projection hidden states feeding the indexer.
+
+    ``with_indexer_loss=True`` (training) additionally returns the
+    DeepSeek-V3.2-style indexer KL loss over the SELECTED support —
+    KL(head-mean sparse attention || softmax(indexer scores[selected])).
+    Top-k indices are non-differentiable, so this auxiliary term is the
+    ONLY gradient path into the indexer (paper §2.1.1 warm-up/joint
+    training).
+    """
+    from repro.sharding.rules import constrain_batch
+    dsa = cfg.dsa
+    B, S, H, dh = q.shape
+
+    def block(q_blk, xq_blk, qpos_blk):
+        scores = constrain_batch(
+            indexer_scores(idx_params, xq_blk, k_idx, dsa), mesh)
+        mask = attention_mask(qpos_blk, kv_positions, causal=True,
+                              window=window, kv_len=kv_len)
+        if dsa.selector == "block" and S >= dsa.block_size \
+                and k.shape[1] % dsa.block_size == 0 \
+                and q_blk.shape[1] % dsa.block_size == 0:
+            bidx, bval = select_topk_blocks(scores, mask, dsa.top_k,
+                                            dsa.block_size)
+            bidx = constrain_batch(bidx, mesh)
+            out = constrain_batch(
+                sparse_block_attention(q_blk, k, v, bidx, bval, qpos_blk,
+                                       kv_positions, dsa.block_size,
+                                       softcap=softcap), mesh)
+            if not with_indexer_loss:
+                return out
+            # indexer loss over the selected blocks' tokens
+            offs = jnp.arange(dsa.block_size)
+            tok_idx = (bidx[..., None] * dsa.block_size + offs).reshape(
+                B, bidx.shape[1], -1)
+            tok_idx = jnp.repeat(tok_idx, dsa.block_size, axis=1
+                                 )[:, :q_blk.shape[1]]
+            sel_scores = jnp.take_along_axis(scores, tok_idx, axis=-1)
+            ind_logp = jax.nn.log_softmax(sel_scores, axis=-1)
+            # target: uniform over selected (block mode has no per-token
+            # probs) — keeps indexer mass ON the selected support
+            kl = -jnp.mean(ind_logp)
+            return out, kl
+        idx, valid = select_topk(scores, mask, dsa.top_k,
+                                 deterministic=dsa.deterministic_topk,
+                                 noise_key=None if dsa.deterministic_topk
+                                 else jax.random.key(0))
+        idx = constrain_batch(idx, mesh)
+        valid = constrain_batch(valid, mesh)
+        if not with_indexer_loss:
+            return constrain_batch(
+                sparse_token_attention(q_blk, k, v, idx, valid, qpos_blk,
+                                       kv_positions, softcap=softcap), mesh)
+        out, tprobs = sparse_token_attention(
+            q_blk, k, v, idx, valid, qpos_blk, kv_positions,
+            softcap=softcap, return_probs=True)
+        sel_scores = jnp.take_along_axis(scores, idx, axis=-1)   # (B,c,K)
+        ind_logp = jax.nn.log_softmax(
+            jnp.where(valid, sel_scores, NEG_INF), axis=-1)
+        t = jax.lax.stop_gradient(jnp.where(valid, tprobs, 0.0))
+        kl = jnp.sum(t * (jnp.log(jnp.clip(t, 1e-20)) - ind_logp), -1)
+        return constrain_batch(out, mesh), jnp.mean(kl)
+
+    if q_chunk <= 0 or S <= q_chunk or S % q_chunk != 0:
+        return block(q, x_q, q_positions)
+    n = S // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, dh).swapaxes(0, 1)
+    xs = x_q.reshape(B, n, q_chunk, -1).swapaxes(0, 1)
+    ps = q_positions.reshape(B, n, q_chunk).swapaxes(0, 1)
+    # checkpoint each chunk: the per-chunk token gather (B,c,K,KVH,dh) is the
+    # dominant transient; never keep more than one chunk's gather live
+    from repro.flags import scan_unroll
+    blk = jax.checkpoint(block)
+    if with_indexer_loss:
+        _, (out, kls) = jax.lax.scan(lambda _, a: (None, blk(*a)), None,
+                                     (qs, xs, ps), unroll=scan_unroll())
+        return out.swapaxes(0, 1).reshape(B, S, H, -1), jnp.mean(kls)
+    _, out = jax.lax.scan(lambda _, a: (None, blk(*a)), None, (qs, xs, ps),
+                          unroll=scan_unroll())
+    return out.swapaxes(0, 1).reshape(B, S, H, -1)

@@ -1,0 +1,136 @@
+"""Multi-latent attention (MLA) with the GLM-5 MLA-256 geometry.
+
+Train/prefill runs MHA-style (latent expanded to per-head K/V); decode runs
+the *absorbed* MQA-style path over the compressed latent cache
+(kv_lora_dim + qk_rope_dim per token — 512+64=576 for GLM-5), which is the
+memory saving MLA exists for.  GLM-5's MLA-256 (head_dim 192->256-v, heads
+-1/3) keeps train FLOPs constant while cutting decode FLOPs — both variants
+are expressible through MLAConfig and measured in benchmarks/attention_variants.
+
+Muon Split (§2.1) applies per-head orthogonalization to W^{UQ}, W^{UK},
+W^{UV} — these are ``wq_b`` and ``wkv_b`` here; their logical specs carry the
+'heads' axis so the optimizer can split them (see repro.optim.muon).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.layers.attention import NEG_INF, attention_mask, dense_attention
+from repro.layers.common import apply_rope, build_rmsnorm, rmsnorm
+from repro.sharding.rules import Builder
+
+
+def build_mla(b: Builder, cfg: ModelConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    b.param("wq_a", (D, m.q_lora_dim), ("embed_fsdp", "lora"))
+    build_rmsnorm(b, m.q_lora_dim, "q_a_norm")
+    b.param("wq_b", (m.q_lora_dim, H * qk), ("lora", "heads"))
+    b.param("wkv_a", (D, m.kv_lora_dim + m.qk_rope_dim), ("embed_fsdp", None))
+    build_rmsnorm(b, m.kv_lora_dim, "kv_a_norm")
+    b.param("wkv_b", (m.kv_lora_dim, H * (m.qk_nope_dim + m.v_head_dim)),
+            ("lora", "heads"))
+    b.param("wo", (H * m.v_head_dim, D), ("heads", "embed_fsdp"))
+
+
+def mla_qkv(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (q (B,S,H,qk), k (B,S,H,qk), v (B,S,H,dv), c, k_rope).
+
+    c (B,S,kv_lora) and k_rope (B,S,rope) are what decode caches.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    qa = rmsnorm(params, x @ params["wq_a"], cfg.norm_eps, "q_a_norm")
+    q = (qa @ params["wq_b"]).reshape(B, S, H, qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_base)
+
+    ckv = x @ params["wkv_a"]
+    c, k_rope = jnp.split(ckv, [m.kv_lora_dim], axis=-1)
+    c = rmsnorm(params, c, cfg.norm_eps, "kv_a_norm")
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_base)
+
+    kv = (c @ params["wkv_b"]).reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, k, v, c, k_rope[:, :, 0, :]
+
+
+def apply_mla(params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, q_chunk: int = 0, mesh=None) -> jax.Array:
+    """MHA-style train/prefill path."""
+    B, S, _ = x.shape
+    q, k, v, _, _ = mla_qkv(params, x, cfg, positions)
+    out = dense_attention(q, k, v, positions, positions, causal=True,
+                          q_chunk=q_chunk or cfg.q_chunk, mesh=mesh)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def _wkv_b_split(params, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    H = cfg.num_heads
+    w = params["wkv_b"].reshape(m.kv_lora_dim, H, m.qk_nope_dim + m.v_head_dim)
+    return w[..., :m.qk_nope_dim], w[..., m.qk_nope_dim:]   # k-part, v-part
+
+
+def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
+                        c_cache: jax.Array, kr_cache: jax.Array,
+                        cache_index: jax.Array, positions: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed MQA-style decode over the latent cache.
+
+    x (B,1,D); c_cache (B,T,kv_lora); kr_cache (B,T,rope).
+    Returns (out (B,1,D), new c_cache, new kr_cache).
+
+    scores_h = (q_nope_h W^UK_h) · c  +  q_rope_h · k_rope      (576-dim dot
+    for GLM-5 — the decode-cost issue MLA-256 mitigates by cutting H by 1/3)
+    out_h    = (probs · c) W^UV_h
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qa = rmsnorm(params, x @ params["wq_a"], cfg.norm_eps, "q_a_norm")
+    q = (qa @ params["wq_b"]).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_base)
+
+    ckv = x @ params["wkv_a"]
+    c_new, kr_new = jnp.split(ckv, [m.kv_lora_dim], axis=-1)
+    c_new = rmsnorm(params, c_new, cfg.norm_eps, "kv_a_norm")
+    kr_new = apply_rope(kr_new[:, :, None, :], positions,
+                        cfg.rope_base)[:, :, 0, :]
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), cache_index, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), cache_index, axis=1)
+
+    wk, wv = _wkv_b_split(params, cfg)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))     # (B,S,H,kv_lora)
+    scores = (jnp.einsum("bshl,btl->bsht", q_lat,
+                         c_cache.astype(jnp.float32))
+              + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                           kr_cache.astype(jnp.float32)))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = scores * scale
+    T = c_cache.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask = attention_mask(positions, kv_pos, causal=True,
+                          kv_len=cache_index + S)
+    scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bsht,btl->bshl", probs,
+                         c_cache.astype(jnp.float32))    # (B,S,H,kv_lora)
+    out = jnp.einsum("bshl,lhv->bshv", out_lat, wv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, S, -1)
+    return out @ params["wo"], c_cache, kr_cache

@@ -1,0 +1,96 @@
+"""Multi-Token Prediction with parameter sharing (GLM-5 §2.1, Table 2).
+
+DeepSeek-V3 trains ONE MTP layer but speculates 2+ tokens at inference,
+creating a train/infer discrepancy that lowers the acceptance rate of later
+draft tokens.  GLM-5 instead runs ``num_predict`` (=3) MTP steps during
+training that all SHARE one layer's parameters — same draft-model memory,
+higher accept length (2.76 vs 2.55 at 4 speculative steps).
+
+This module is block-agnostic: the transformer block build/apply callables
+are injected by the model (avoids a core->models dependency).  It provides:
+
+* ``build_mtp`` / ``mtp_train_losses`` — the training-side objective;
+* ``speculative_accept_length`` — the Table-2 measurement: draft tokens with
+  the MTP head, verify with the full model, count accepted prefix length.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import build_rmsnorm, rmsnorm
+from repro.sharding.rules import Builder
+
+
+def build_mtp(b: Builder, cfg: ModelConfig,
+              build_block: Callable[[Builder], None]):
+    """One shared MTP layer: [norm(h); norm(emb)] -> proj -> block."""
+    D = cfg.d_model
+    build_rmsnorm(b, D, "h_norm")
+    build_rmsnorm(b, D, "e_norm")
+    b.param("proj", (2 * D, D), ("embed", "embed_fsdp"))
+    if not cfg.mtp.share_params:
+        for j in range(cfg.mtp.num_predict):
+            build_block(b.sub(f"block_{j}"))
+    else:
+        build_block(b.sub("block"))
+
+
+def _mtp_block_params(params, cfg: ModelConfig, j: int):
+    if cfg.mtp.share_params:
+        return params["block"]
+    return params[f"block_{j}"]
+
+
+def mtp_step(params, cfg: ModelConfig, h: jax.Array, emb_next: jax.Array,
+             positions: jax.Array, j: int,
+             apply_block: Callable) -> jax.Array:
+    """h (B,S,D) hidden from previous step; emb_next (B,S,D) embeddings of
+    the (j-th future) input tokens.  Returns new hidden (B,S,D)."""
+    x = jnp.concatenate([rmsnorm(params, h, cfg.norm_eps, "h_norm"),
+                         rmsnorm(params, emb_next, cfg.norm_eps, "e_norm")],
+                        axis=-1)
+    x = x @ params["proj"]
+    return apply_block(_mtp_block_params(params, cfg, j), x, positions)
+
+
+def mtp_train_losses(params, cfg: ModelConfig, h_trunk: jax.Array,
+                     tokens: jax.Array, targets: jax.Array,
+                     positions: jax.Array,
+                     embed_fn: Callable, logits_loss_fn: Callable,
+                     apply_block: Callable) -> jax.Array:
+    """Mean CE over the ``num_predict`` MTP steps.
+
+    Step j predicts token t+1+j from hidden state at t.  Valid length
+    shrinks by one token per step; we mask instead of slicing so shapes stay
+    static (scan/jit friendly).
+    """
+    B, S = tokens.shape
+    n = cfg.mtp.num_predict
+    h = h_trunk
+    total = 0.0
+    for j in range(1, n + 1):
+        # input tokens shifted left by j; targets shifted left by j as well
+        in_tok = jnp.roll(tokens, -j, axis=1)
+        tgt = jnp.roll(targets, -j, axis=1)
+        valid = jnp.arange(S)[None, :] < (S - j)
+        emb_next = embed_fn(in_tok)
+        h = mtp_step(params, cfg, h, emb_next, positions, j - 1, apply_block)
+        total = total + logits_loss_fn(h, tgt, valid)
+    return total / n
+
+
+def speculative_accept_length(
+        draft_tokens: jax.Array, verify_argmax: jax.Array) -> jax.Array:
+    """Accept length per sequence = 1 + length of the matching prefix.
+
+    draft_tokens (B, n): tokens proposed by the MTP head;
+    verify_argmax (B, n): the full model's greedy choice at each draft slot.
+    Mirrors standard speculative-decoding acceptance (greedy variant).
+    """
+    match = (draft_tokens == verify_argmax).astype(jnp.int32)
+    prefix = jnp.cumprod(match, axis=1)
+    return 1 + prefix.sum(axis=1)

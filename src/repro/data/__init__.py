@@ -1,0 +1,1 @@
+from repro.data import needle, pipeline, synthetic  # noqa: F401

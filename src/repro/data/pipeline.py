@@ -1,0 +1,74 @@
+"""Device-feeding data pipeline: host generators -> sharded device batches.
+
+Single-process version of the production input pipeline: a background
+prefetch thread drives the numpy generator while the previous step runs, and
+``jax.device_put`` places each batch with the mesh's batch sharding (the
+multi-host generalization swaps device_put for
+``jax.make_array_from_process_local_data`` — same call structure).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import resolve_spec
+
+
+class Pipeline:
+    def __init__(self, gen: Iterator[Dict[str, np.ndarray]], *,
+                 mesh: Optional[Mesh] = None, rules=None,
+                 prefetch: int = 2):
+        self._gen = gen
+        self._mesh = mesh
+        self._rules = rules
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for item in self._gen:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+        finally:
+            self._q.put(None)
+
+    def _shard(self, batch: Dict[str, np.ndarray]):
+        if self._mesh is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        out = {}
+        for k, v in batch.items():
+            spec = resolve_spec(("batch",) + (None,) * (v.ndim - 1),
+                                v.shape, self._rules, self._mesh)
+            out[k] = jax.device_put(v, NamedSharding(self._mesh, spec))
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            raise StopIteration
+        return self._shard(item)
+
+    def close(self):
+        self._stop.set()
+
+
+def lm_generator(vocab_size: int, seq_len: int, batch: int, *, seed: int = 0,
+                 steps: Optional[int] = None):
+    from repro.data.synthetic import markov_stream
+    it = markov_stream(vocab_size, seq_len, batch, seed=seed)
+    n = 0
+    while steps is None or n < steps:
+        arr = next(it)
+        yield {"tokens": arr[:, :-1], "targets": arr[:, 1:]}
+        n += 1

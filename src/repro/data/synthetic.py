@@ -1,0 +1,81 @@
+"""Deterministic synthetic LM corpora.
+
+No external data ships with the container, so every benchmark that needs a
+"corpus" draws from these generators:
+
+* ``markov_stream`` — a Zipf-initialized order-1 Markov chain over the vocab.
+  Has real sequential structure (learnable; loss decreases well below the
+  unigram entropy), deterministic given seed.
+* ``copy_task`` / ``reverse_task`` / ``sort_task`` — verifiable seq2seq toy
+  tasks used by the RL environments (binary outcome rewards, GLM-5 §3.2).
+* needle-retrieval long-context tasks live in ``repro.data.needle``.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+def make_markov(vocab_size: int, seed: int = 0, branching: int = 8
+                ) -> np.ndarray:
+    """Row-stochastic transition matrix with ``branching`` successors/state."""
+    rng = np.random.default_rng(seed)
+    T = np.zeros((vocab_size, vocab_size), np.float32)
+    for s in range(vocab_size):
+        nxt = rng.choice(vocab_size, size=branching, replace=False)
+        w = rng.dirichlet(np.ones(branching) * 0.5)
+        T[s, nxt] = w
+    return T
+
+
+def markov_stream(vocab_size: int, seq_len: int, batch: int, *,
+                  seed: int = 0,
+                  stream_seed: Optional[int] = None) -> Iterator[np.ndarray]:
+    """Yields (batch, seq_len+1) int32 — slice [:-1] tokens / [1:] targets.
+
+    ``seed`` fixes the LANGUAGE (transition matrix); ``stream_seed`` the
+    sample stream (defaults to seed+1) — train and eval must share ``seed``
+    or the eval measures a different language."""
+    T = make_markov(vocab_size, seed)
+    cum = np.cumsum(T, axis=1)
+    rng = np.random.default_rng(seed + 1 if stream_seed is None
+                                else stream_seed)
+    while True:
+        out = np.empty((batch, seq_len + 1), np.int32)
+        state = rng.integers(0, vocab_size, size=batch)
+        out[:, 0] = state
+        for t in range(1, seq_len + 1):
+            u = rng.random(batch)[:, None]
+            state = (cum[state] > u).argmax(axis=1)
+            out[:, t] = state
+        yield out
+
+
+def lm_batch(stream_it, ) -> dict:
+    arr = next(stream_it)
+    return {"tokens": arr[:, :-1], "targets": arr[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# verifiable toy tasks (RL envs)
+# ---------------------------------------------------------------------------
+
+def copy_task(rng: np.random.Generator, n: int, vocab: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """prompt = random digits; answer = the same digits."""
+    x = rng.integers(3, vocab, size=n)
+    return x, x.copy()
+
+
+def reverse_task(rng, n, vocab):
+    x = rng.integers(3, vocab, size=n)
+    return x, x[::-1].copy()
+
+
+def sort_task(rng, n, vocab):
+    x = rng.integers(3, vocab, size=n)
+    return x, np.sort(x)
+
+
+TASKS = {"copy": copy_task, "reverse": reverse_task, "sort": sort_task}

@@ -1,0 +1,18 @@
+"""Process-wide lowering flags.
+
+``UNROLL_SCANS``: XLA's ``cost_analysis()`` counts a while-loop body ONCE,
+not times its trip count, so scanned layers / chunked attention would
+under-report FLOPs and bytes by 30-100x in the roofline.  The dry-run driver
+sets this True to lower with unrolled scans (identical math, accurate
+accounting, slower compile).  Training/serving keep scans (fast compile).
+
+Time-recurrences (mamba selective scan) stay scanned even when set — their
+FLOPs are corrected analytically in the roofline report (see
+EXPERIMENTS.md §Roofline notes).
+"""
+UNROLL_SCANS = False
+
+
+def scan_unroll():
+    """Value to pass as lax.scan(..., unroll=...)."""
+    return True if UNROLL_SCANS else 1

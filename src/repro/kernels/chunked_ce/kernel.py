@@ -1,0 +1,106 @@
+"""Pallas TPU sequence-chunked output-projection + cross-entropy kernel
+(GLM-5 §2.4.1 "sequence-chunked output projection for peak memory
+reduction").
+
+Computes Σ mask·(logsumexp(h·W) − (h·W)[target]) without ever materializing
+a (tokens, V) logits tensor in HBM: grid = (n_token_blocks, n_vocab_blocks),
+online-logsumexp over vocab blocks with (block_t,) running max/sum scratch;
+the (block_t, block_v) logits tile lives only in VMEM.
+
+128×512 fp32 tile + (block_t, D) h tile + (D, block_v) W tile ≈
+(128·512 + 128·4096 + 4096·512)·4B ≈ 10.6 MiB — sized for 16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(h_ref, w_ref, tgt_ref, mask_ref, loss_ref, cnt_ref,
+               m_scr, l_scr, t_scr, *, block_v: int, vocab: int,
+               softcap: float):
+    ti = pl.program_id(0)
+    vi = pl.program_id(1)
+    nv = pl.num_programs(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    h = h_ref[...].astype(jnp.float32)                 # (bt, D)
+    w = w_ref[...].astype(jnp.float32)                 # (D, bv)
+    logits = jax.lax.dot_general(h, w, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    bt, bv = logits.shape
+    v_ids = vi * block_v + jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    valid = v_ids < vocab
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(logits - m_new[:, None]), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    m_scr[...] = m_new
+    # pick out the target logit if it falls in this vocab block
+    tgt = tgt_ref[...]                                 # (bt,)
+    hit = (v_ids == tgt[:, None]) & valid
+    t_scr[...] = t_scr[...] + jnp.sum(jnp.where(hit, logits, 0.0), axis=1)
+
+    @pl.when(vi == nv - 1)
+    def _finish():
+        mask = mask_ref[...].astype(jnp.float32)
+        logz = m_scr[...] + jnp.log(jnp.maximum(l_scr[...], 1e-30))
+        nll = logz - t_scr[...]
+        loss_ref[0, 0] = jnp.sum(nll * mask)
+        cnt_ref[0, 0] = jnp.sum(mask)
+
+
+def chunked_ce(h: jax.Array, w: jax.Array, targets: jax.Array,
+               mask: jax.Array, *, block_t: int = 128, block_v: int = 512,
+               softcap: float = 0.0, interpret: bool = True):
+    """h (Tk, D), w (D, V), targets/mask (Tk,) -> (loss_sum, count)."""
+    Tk, D = h.shape
+    V = w.shape[1]
+    block_t = min(block_t, Tk)
+    block_v = min(block_v, V)
+    nt = math.ceil(Tk / block_t)
+    nv = math.ceil(V / block_v)
+    kern = functools.partial(_ce_kernel, block_v=block_v, vocab=V,
+                             softcap=softcap)
+    loss, cnt = pl.pallas_call(
+        kern,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((block_t, D), lambda t, v: (t, 0)),
+            pl.BlockSpec((D, block_v), lambda t, v: (0, v)),
+            pl.BlockSpec((block_t,), lambda t, v: (t,)),
+            pl.BlockSpec((block_t,), lambda t, v: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda t, v: (t, 0)),
+            pl.BlockSpec((1, 1), lambda t, v: (t, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nt, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+            pltpu.VMEM((block_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, w, targets, mask)
+    return jnp.sum(loss), jnp.sum(cnt)

@@ -1,0 +1,24 @@
+"""Dispatch wrapper for the chunked-CE kernel (flattens (B,S) -> tokens)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_ce.kernel import chunked_ce
+from repro.kernels.chunked_ce.ref import reference
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "impl"))
+def xent_loss(h, w, targets, mask, *, softcap: float = 0.0,
+              impl: str = "pallas"):
+    """h (B,S,D), w (D,V), targets/mask (B,S) -> (loss_sum, count)."""
+    B, S, D = h.shape
+    hf = h.reshape(B * S, D)
+    tf = targets.reshape(B * S)
+    mf = mask.reshape(B * S).astype(jnp.float32)
+    if impl == "ref":
+        return reference(hf, w, tf, mf, softcap=softcap)
+    return chunked_ce(hf, w, tf, mf, softcap=softcap,
+                      interpret=jax.default_backend() != "tpu")

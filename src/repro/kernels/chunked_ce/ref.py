@@ -1,0 +1,13 @@
+"""Oracle: the model-side chunked CE from repro.models.losses."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.losses import chunked_softmax_xent
+
+
+def reference(h, w, targets, mask, *, softcap: float = 0.0):
+    """h (Tk,D), w (D,V), targets/mask (Tk,) -> (loss_sum, count)."""
+    loss, cnt = chunked_softmax_xent(h[None], w, targets[None], mask[None],
+                                     chunk=h.shape[0], softcap=softcap)
+    return loss, cnt

@@ -1,0 +1,39 @@
+"""jit'd dispatch wrapper: Pallas on TPU, interpret-mode Pallas or the jnp
+oracle on CPU.  Accepts model-layout tensors (B, S, H, d) with GQA groups."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import reference
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "impl"))
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+           window: int = 0, softcap: float = 0.0, impl: str = "pallas"
+           ) -> jax.Array:
+    """q (B,S,H,d), k/v (B,T,KVH,d) -> (B,S,H,d)."""
+    B, S, H, d = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    if G > 1:  # expand KV heads to match query heads
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    if impl == "ref":
+        of = reference(qf, kf, vf, causal=causal, window=window,
+                       softcap=softcap)
+    else:
+        of = flash_attention(qf, kf, vf, causal=causal, window=window,
+                             softcap=softcap, interpret=not _on_tpu())
+    return of.reshape(B, H, S, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Dispatch wrapper over model params (same inputs as core.dsa.indexer_scores)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DSAConfig
+from repro.kernels.lightning_indexer.kernel import lightning_indexer
+from repro.kernels.lightning_indexer.ref import reference
+
+
+@functools.partial(jax.jit, static_argnames=("dsa", "impl"))
+def indexer_scores(params, x_q: jax.Array, k_idx: jax.Array,
+                   dsa: DSAConfig, impl: str = "pallas") -> jax.Array:
+    """Drop-in for repro.core.dsa.indexer_scores backed by the kernel."""
+    q = x_q @ params["wq_idx"]
+    w = jax.nn.softmax((x_q @ params["w_head"]).astype(jnp.float32), -1)
+    if impl == "ref":
+        return reference(q, w, k_idx, heads=dsa.index_heads,
+                         head_dim=dsa.index_head_dim)
+    return lightning_indexer(q, w, k_idx, heads=dsa.index_heads,
+                             head_dim=dsa.index_head_dim,
+                             interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,14 @@
+"""Oracle: the XLA indexer from repro.core.dsa, reshaped to kernel layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(q_idx: jax.Array, w_head: jax.Array, k_idx: jax.Array, *,
+              heads: int, head_dim: int) -> jax.Array:
+    B, S, _ = q_idx.shape
+    q = q_idx.reshape(B, S, heads, head_dim).astype(jnp.float32)
+    dots = jnp.einsum("bshd,btd->bsht", q, k_idx.astype(jnp.float32))
+    dots = jax.nn.relu(dots) * (head_dim ** -0.5)
+    return jnp.einsum("bsht,bsh->bst", dots, w_head.astype(jnp.float32))

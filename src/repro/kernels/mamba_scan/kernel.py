@@ -1,0 +1,74 @@
+"""Pallas TPU selective-scan kernel (Mamba-1 core recurrence).
+
+     h[t] = dA[t] * h[t-1] + dBx[t] ;   y[t] = <h[t], C[t]>
+
+Tiling: grid = (B, n_channel_blocks).  Each program owns a (block_e, N)
+state tile resident in VMEM and walks the time axis with a fori_loop,
+streaming (S, block_e·N) inputs from its VMEM block — the classic
+"state-resident" TPU scan layout (contrast with the CUDA kernel's
+warp-parallel scan; DESIGN.md hardware-adaptation note).  The time loop is
+sequential but each step is a (block_e, N) VPU op; channel blocks and batch
+are the parallel axes.
+
+block_e defaults to 512 channels: state tile 512×16×4B = 32 KiB; the
+streamed inputs dominate VMEM at (S·block_e·N)·4B — callers chunk S so the
+tile fits (ops.py slices sequences into VMEM-sized chunks and carries h
+between chunks).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dA_ref, dBx_ref, C_ref, h0_ref, y_ref, hT_ref, h_scr):
+    S = dA_ref.shape[1]
+    h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(t, _):
+        dA = dA_ref[0, t].astype(jnp.float32)        # (be, N)
+        dBx = dBx_ref[0, t].astype(jnp.float32)      # (be, N)
+        c = C_ref[0, t].astype(jnp.float32)          # (N,)
+        h = dA * h_scr[...] + dBx
+        h_scr[...] = h
+        y_ref[0, t] = jnp.sum(h * c[None, :], axis=1).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, S, step, 0)
+    hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
+
+
+def mamba_scan(dA: jax.Array, dBx: jax.Array, C: jax.Array,
+               h0: jax.Array, *, block_e: int = 512,
+               interpret: bool = True):
+    """dA/dBx (B,S,E,N), C (B,S,N), h0 (B,E,N) ->
+    (y (B,S,E), hT (B,E,N))."""
+    B, S, E, N = dA.shape
+    block_e = min(block_e, E)
+    ne = math.ceil(E / block_e)
+    y, hT = pl.pallas_call(
+        _scan_kernel,
+        grid=(B, ne),
+        in_specs=[
+            pl.BlockSpec((1, S, block_e, N), lambda b, e: (b, 0, e, 0)),
+            pl.BlockSpec((1, S, block_e, N), lambda b, e: (b, 0, e, 0)),
+            pl.BlockSpec((1, S, N), lambda b, e: (b, 0, 0)),
+            pl.BlockSpec((1, block_e, N), lambda b, e: (b, e, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, S, block_e), lambda b, e: (b, 0, e)),
+            pl.BlockSpec((1, block_e, N), lambda b, e: (b, e, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, E), dA.dtype),
+            jax.ShapeDtypeStruct((B, E, N), dA.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_e, N), jnp.float32)],
+        interpret=interpret,
+    )(dA, dBx, C, h0)
+    return y, hT

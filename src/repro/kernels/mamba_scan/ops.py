@@ -1,0 +1,37 @@
+"""Dispatch wrapper: chunk the sequence so each kernel call's streamed
+inputs fit VMEM, carrying the state tile between chunks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.kernel import mamba_scan
+from repro.kernels.mamba_scan.ref import reference
+
+
+@functools.partial(jax.jit, static_argnames=("seq_chunk", "impl"))
+def selective_scan(dA: jax.Array, dBx: jax.Array, C: jax.Array,
+                   h0: jax.Array, *, seq_chunk: int = 256,
+                   impl: str = "pallas"):
+    """Same contract as kernel.mamba_scan, sequence-chunked."""
+    if impl == "ref":
+        return reference(dA, dBx, C, h0)
+    B, S, E, N = dA.shape
+    interp = jax.default_backend() != "tpu"
+    if S <= seq_chunk or S % seq_chunk != 0:
+        return mamba_scan(dA, dBx, C, h0, interpret=interp)
+    n = S // seq_chunk
+
+    def body(h, xs):
+        da, dbx, c = xs
+        y, hT = mamba_scan(da, dbx, c, h, interpret=interp)
+        return hT, y
+
+    xs = (dA.reshape(B, n, seq_chunk, E, N).swapaxes(0, 1),
+          dBx.reshape(B, n, seq_chunk, E, N).swapaxes(0, 1),
+          C.reshape(B, n, seq_chunk, N).swapaxes(0, 1))
+    hT, ys = jax.lax.scan(body, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, E)
+    return y, hT

@@ -1,0 +1,13 @@
+"""Oracle: the lax.scan selective scan from repro.layers.ssm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.ssm import _mamba1_scan
+
+
+def reference(dA, dBx, C, h0):
+    y, hT = _mamba1_scan(dA.astype(jnp.float32), dBx.astype(jnp.float32),
+                         C.astype(jnp.float32), h0.astype(jnp.float32))
+    return y.astype(dA.dtype), hT.astype(dA.dtype)

@@ -1,0 +1,113 @@
+"""Pallas TPU block-sparse attention — the DSA sparse core, TPU-adapted.
+
+DeepSeek's GPU DSA gathers individual top-k tokens (warp-friendly, MXU-
+hostile).  The TPU adaptation attends each 128-query block to its top
+``nb = k/128`` selected 128-token KEY BLOCKS; the selected block ids arrive
+via *scalar prefetch* so the BlockSpec index_map DMAs exactly the chosen
+K/V blocks HBM→VMEM — contiguous transfers, dense MXU tiles inside.
+
+grid = (BH, n_q_blocks, nb); online-softmax scratch as in flash_attention.
+Causality is enforced from the real token positions of the selected block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sparse_kernel(bidx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, block_q: int, block_k: int, seq_k: int,
+                   scale: float, softcap: float):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ji = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kblock = bidx_ref[bh, qi, ji]                      # selected key block id
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kblock * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = (k_pos <= q_pos) & (k_pos < seq_k) & (kblock >= 0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ji == nb - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def block_sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_idx: jax.Array, *, block_size: int = 128,
+                           softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """q (BH,S,d), k/v (BH,T,d), block_idx (BH, S//bs, nb) int32 (-1 = skip).
+
+    Every query block attends only to its selected key blocks.
+
+    PRECONDITION: within a row, selected block ids must be DISTINCT (or -1)
+    — guaranteed by top-k selection (distinct argmax positions).  A
+    duplicated id would double-count that block's probability mass (the
+    ops wrapper de-duplicates defensively).
+    """
+    BH, S, d = q.shape
+    T = k.shape[1]
+    nqb = S // block_size
+    nb = block_idx.shape[-1]
+    kern = functools.partial(_sparse_kernel, block_q=block_size,
+                             block_k=block_size, seq_k=T,
+                             scale=d ** -0.5, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, nqb, nb),
+        in_specs=[
+            pl.BlockSpec((1, block_size, d), lambda b, i, j, bidx: (b, i, 0)),
+            pl.BlockSpec((1, block_size, d),
+                         lambda b, i, j, bidx: (b, jnp.maximum(
+                             bidx[b, i, j], 0), 0)),
+            pl.BlockSpec((1, block_size, d),
+                         lambda b, i, j, bidx: (b, jnp.maximum(
+                             bidx[b, i, j], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size, d),
+                               lambda b, i, j, bidx: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_size,), jnp.float32),
+            pltpu.VMEM((block_size,), jnp.float32),
+            pltpu.VMEM((block_size, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        interpret=interpret,
+    )(block_idx, q, k, v)

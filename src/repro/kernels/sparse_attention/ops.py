@@ -1,0 +1,53 @@
+"""Dispatch wrapper: indexer scores -> block top-k -> block-sparse kernel.
+
+End-to-end DSA sparse attention in kernel form (used by the mechanism-level
+benchmarks; the model path uses the XLA implementation in repro.core.dsa,
+numerically equivalent).  De-duplicates selected block ids defensively
+(kernel precondition) by mapping duplicates to -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_attention.kernel import block_sparse_attention
+from repro.kernels.sparse_attention.ref import reference
+
+
+def dedupe_blocks(bidx: jax.Array) -> jax.Array:
+    """Map repeated ids within each row to -1 (keep first occurrence)."""
+    nb = bidx.shape[-1]
+    eq = bidx[..., :, None] == bidx[..., None, :]           # (..., nb, nb)
+    earlier = jnp.tril(jnp.ones((nb, nb), bool), -1)
+    dup = (eq & earlier).any(-1)
+    return jnp.where(dup, -1, bidx)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "softcap",
+                                             "impl"))
+def sparse_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                  block_idx: jax.Array, *, block_size: int = 128,
+                  softcap: float = 0.0, impl: str = "pallas") -> jax.Array:
+    """q (B,S,H,d), k/v (B,T,KVH,d), block_idx (B, S//bs, nb) shared across
+    heads (DSA selects tokens, not head-specific)."""
+    B, S, H, d = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, d)
+    bidx = dedupe_blocks(block_idx.astype(jnp.int32))
+    bidx_h = jnp.repeat(bidx, H, axis=0)                    # (B*H, nqb, nb)
+    if impl == "ref":
+        of = reference(qf, kf, vf, bidx_h, block_size=block_size,
+                       softcap=softcap)
+    else:
+        of = block_sparse_attention(qf, kf, vf, bidx_h,
+                                    block_size=block_size, softcap=softcap,
+                                    interpret=jax.default_backend() != "tpu")
+    return of.reshape(B, H, S, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Oracle: dense attention restricted to the selected key blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def reference(q: jax.Array, k: jax.Array, v: jax.Array,
+              block_idx: jax.Array, *, block_size: int = 128,
+              softcap: float = 0.0) -> jax.Array:
+    """Same contract as kernel.block_sparse_attention, exact softmax over
+    the union of selected blocks (causal)."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    nqb = S // block_size
+    nkb = T // block_size
+    # build a (BH, nqb, nkb) allowed-block mask from block_idx
+    allowed = jnp.zeros((BH, nqb, nkb), bool)
+    bb = jnp.clip(block_idx, 0, nkb - 1)
+    # .max (logical or) so a -1 entry clipped to block 0 cannot UNSET a
+    # legitimately selected block 0
+    allowed = allowed.at[
+        jnp.arange(BH)[:, None, None],
+        jnp.arange(nqb)[None, :, None], bb].max(block_idx >= 0)
+    tok_allowed = jnp.repeat(jnp.repeat(allowed, block_size, 1),
+                             block_size, 2)            # (BH, S, T)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    causal = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+    s = jnp.where(tok_allowed & causal[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(tok_allowed & causal[None], p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape) this lowers + compiles the real step
+function (train_step incl. Muon update for train_4k; forward for
+prefill_32k; serve_step for decode shapes) against the production mesh —
+single-pod (16,16) and multi-pod (2,16,16) — using ShapeDtypeStruct inputs
+(no allocation), then records memory_analysis / cost_analysis / collective
+schedule into experiments/dryrun/*.json for the roofline report.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-too]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, canonical, get_config
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (decode_specs, opt_state_specs, param_specs,
+                                skip_reason, train_batch_specs)
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.roofline import analyze, model_flops
+from repro.sharding.rules import make_rules
+from repro.utils import tree_bytes
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            fsdp: bool = True, selector: str = None, remat_group: int = 1,
+            q_chunk: int = 128, seq_parallel: bool = False,
+            muon_sharded_ns: bool = False, decode_kv_model: bool = False,
+            extra_tag: str = "", verbose: bool = True) -> dict:
+    arch = canonical(arch)
+    cfg = get_config(arch)
+    if selector and cfg.dsa is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(dsa=_dc.replace(cfg.dsa, selector=selector))
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        # production training always remats (paper §2.4.1); tape every
+        # remat_group groups — a §Perf hillclimb lever
+        cfg = cfg.replace(remat="full", q_chunk=q_chunk,
+                          remat_group=remat_group,
+                          seq_parallel=seq_parallel)
+    # NOTE: cost_analysis counts while bodies once; roofline.analyze uses
+    # the trip-count-aware HLO parser instead (repro.roofline.hlo_parse),
+    # so scans stay scanned (fast compiles).
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}_{shape_name}_{mesh_name}{extra_tag}"
+    skip = skip_reason(cfg, shape)
+    if skip:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": skip}
+        _save(tag, rec)
+        if verbose:
+            print(f"[skip] {tag}: {skip}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    overrides = {}
+    if decode_kv_model and shape.kind == "decode":
+        # DP-attention adaptation: shard the KV-cache LENGTH over 'model'
+        # (§Perf decode hillclimb — kv-head counts < 16 can't shard heads)
+        overrides["kv_seq"] = "model"
+    rules = make_rules(mesh, fsdp=fsdp,
+                       context_parallel_kv=(shape.name == "long_500k"
+                                            and cfg.family not in
+                                            ("ssm", "hybrid")),
+                       overrides=overrides)
+    t0 = time.time()
+    params, specs, p_shard = param_specs(cfg, mesh, rules)
+
+    if shape.kind == "train":
+        opt, opt_shard = opt_state_specs(params, p_shard, mesh)
+        batch, b_shard = train_batch_specs(cfg, shape, mesh, rules)
+        step = make_train_step(cfg, specs, mesh=mesh,
+                               muon_sharded_ns=muon_sharded_ns)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, opt_shard, b_shard),
+                         out_shardings=(p_shard, opt_shard, None),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params, opt, batch)
+    elif shape.kind == "prefill":
+        batch, b_shard = train_batch_specs(cfg, shape, mesh, rules)
+        batch = {k: v for k, v in batch.items() if k != "targets"
+                 and k != "loss_mask"}
+        b_shard = {k: v for k, v in b_shard.items() if k in batch}
+        step = make_prefill_step(cfg, mesh=mesh)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = jitted.lower(params, batch)
+    else:  # decode
+        dspec, d_shard = decode_specs(cfg, shape, mesh, rules)
+        step = make_serve_step(cfg, mesh=mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, d_shard["token"], d_shard["cache"],
+                          d_shard["cache_index"]),
+            out_shardings=(None, d_shard["cache"]),
+            donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(params, dspec["token"], dspec["cache"],
+                                   dspec["cache_index"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mf = model_flops(cfg, shape)
+    roof = analyze(compiled, arch=arch, shape=shape_name,
+                   mesh_name=mesh_name, chips=chips, model_flops=mf)
+    mem = compiled.memory_analysis()
+    rec = roof.to_dict()
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "param_bytes_global": tree_bytes(params),
+        "memory_analysis": {
+            "argument_size_in_bytes": mem.argument_size_in_bytes,
+            "output_size_in_bytes": mem.output_size_in_bytes,
+            "temp_size_in_bytes": mem.temp_size_in_bytes,
+            "alias_size_in_bytes": mem.alias_size_in_bytes,
+        },
+    })
+    _save(tag, rec)
+    if verbose:
+        print(f"[ok] {tag}: dominant={rec['dominant']} "
+              f"compute={rec['compute_s']:.4f}s memory={rec['memory_s']:.4f}s "
+              f"collective={rec['collective_s']:.4f}s "
+              f"hbm/device={(mem.argument_size_in_bytes + mem.temp_size_in_bytes)/2**30:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def _save(tag: str, rec: dict):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    with open(OUT_DIR / f"{tag}.json", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--multi-pod-too", action="store_true",
+                    help="run each combo on both meshes")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--selector", default=None, choices=[None, "token",
+                                                         "block"])
+    args = ap.parse_args()
+
+    archs = [a for a in ARCH_IDS if a != "glm5_744b"] if args.all \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if args.multi_pod_too else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape, multi_pod=mp,
+                            fsdp=not args.no_fsdp, selector=args.selector)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × input-shape).
+
+``input_specs`` returns everything ``dryrun.py`` needs to ``.lower()`` a
+train/prefill/serve step without allocating: abstract params, optimizer
+state, batch/cache structs, and their NamedShardings resolved through the
+logical-axis rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import get_model
+from repro.sharding.rules import make_rules, resolve_spec, tree_shardings
+from repro.utils import abstract_like
+
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """Return a string if this (arch, shape) pair is skipped (DESIGN.md)."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return ("enc-dec transcript positions bounded by design; 500k "
+                    "autoregressive decode not meaningful (DESIGN.md)")
+        if cfg.family not in ("ssm", "hybrid") and cfg.dsa is None:
+            return "full-attention arch without a sub-quadratic variant"
+    return None
+
+
+def _batch_sharding(mesh: Mesh, rules) -> P:
+    return resolve_spec(("batch", "seq"), (1 << 30, 1), rules, mesh)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      rules) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    B, S = shape.global_batch, shape.seq_len
+    F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    S_text = S - F if cfg.family == "vlm" else S
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((B, S_text), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct((B, F, cfg.d_model),
+                                                        ACT_DTYPE)
+    if cfg.family == "audio":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), ACT_DTYPE)
+    shardings = {
+        k: NamedSharding(mesh, resolve_spec(
+            ("batch",) + (None,) * (len(v.shape) - 1), v.shape, rules, mesh))
+        for k, v in batch.items()}
+    return batch, shardings
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, rules
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """serve_step inputs: one new token + KV cache of shape.seq_len."""
+    B, T = shape.global_batch, shape.seq_len
+    model = get_model(cfg)
+    cache, cache_axes = model.init_cache(cfg, B, T, dtype=ACT_DTYPE,
+                                         abstract=True)
+    cache_shardings = tree_shardings(cache, cache_axes, rules, mesh)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    specs = {"token": token, "cache": cache, "cache_index": idx}
+    shardings = {
+        "token": NamedSharding(mesh, resolve_spec(("batch", None),
+                                                  (B, 1), rules, mesh)),
+        "cache": cache_shardings,
+        "cache_index": NamedSharding(mesh, P()),
+    }
+    return specs, shardings
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules
+                ) -> Tuple[Any, Any, Any]:
+    """Returns (abstract params, logical specs, NamedShardings)."""
+    model = get_model(cfg)
+    params, specs = model.init(jax.random.key(0), cfg, dtype=ACT_DTYPE,
+                               abstract=True)
+    shardings = tree_shardings(params, specs, rules, mesh)
+    return params, specs, shardings
+
+
+def opt_state_specs(params, shardings, mesh: Mesh):
+    """Muon state: momentum+second shaped like params (fp32), count scalar."""
+    from repro.optim.muon import MuonState
+    mom = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params)
+    sec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), params)
+    count = jax.ShapeDtypeStruct((), jnp.int32)
+    st = MuonState(momentum=mom, second=sec, count=count)
+    sh = MuonState(momentum=shardings, second=shardings,
+                   count=NamedSharding(mesh, P()))
+    return st, sh

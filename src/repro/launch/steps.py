@@ -1,0 +1,61 @@
+"""jit-able step functions (train / prefill / serve) shared by the real
+launcher (train.py, serve.py) and the dry-run driver."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.layers.common import logits_from_hidden
+from repro.models import get_model
+from repro.optim import muon
+
+
+def make_train_step(cfg: ModelConfig, specs, *, mesh=None,
+                    train_cfg: Optional[TrainConfig] = None,
+                    lr: float = 2e-4, muon_sharded_ns: bool = False):
+    model = get_model(cfg)
+    tc = train_cfg or TrainConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            l, metrics = model.loss(p, batch, cfg, mesh=mesh)
+            return l, metrics
+        (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = muon.global_norm_clip(grads, tc.grad_clip)
+        params, opt_state = muon.update(
+            params, grads, specs, opt_state, lr=lr, cfg=cfg,
+            weight_decay=tc.weight_decay, split=tc.muon_split,
+            mesh=mesh if muon_sharded_ns else None)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mesh=None):
+    """Forward over the full prompt, returning last-position logits."""
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        kw = {}
+        if "frontend_embeds" in batch:
+            kw["frontend_embeds"] = batch["frontend_embeds"]
+        h, _, _ = model.hidden(params, batch["tokens"], cfg, mesh=mesh, **kw)
+        return logits_from_hidden(params["embed"], h[:, -1:], cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, mesh=None):
+    """One decode step against a pre-filled KV cache."""
+    model = get_model(cfg)
+
+    def serve_step(params, token, cache, cache_index):
+        return model.decode_step(params, token, cfg, cache, cache_index,
+                                 mesh=mesh)
+
+    return serve_step

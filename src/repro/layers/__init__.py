@@ -1,0 +1,1 @@
+from repro.layers import attention, common, gdn, moe, ssm  # noqa: F401

@@ -1,0 +1,162 @@
+"""Dense attention substrate: GQA with RoPE, sliding window, logit softcap.
+
+``dense_attention`` is the exact XLA reference path (query-chunked so 32k
+prefill never materializes a full (S,T) score matrix per head group); the
+Pallas flash kernel in ``repro.kernels.flash_attention`` is numerically
+checked against it.  DSA sparse attention lives in ``repro.core.dsa`` and
+reuses these primitives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import apply_rope, build_rmsnorm, rmsnorm
+from repro.sharding.rules import Builder
+
+NEG_INF = -2.0e38
+
+
+def attention_mask(q_positions: jax.Array, kv_positions: jax.Array,
+                   *, causal: bool = True, window: int = 0,
+                   kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """(..., S, T) boolean mask. window>0 = sliding-window (local) layers."""
+    qp = q_positions[..., :, None]
+    kp = kv_positions[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= (qp - kp) < window
+    if kv_len is not None:
+        m &= kp < kv_len
+    return m
+
+
+def _scores_to_probs(scores: jax.Array, mask: jax.Array,
+                     softcap: float) -> jax.Array:
+    scores = scores.astype(jnp.float32)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_positions: jax.Array, kv_positions: jax.Array,
+                    *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, kv_len: Optional[jax.Array] = None,
+                    q_chunk: int = 0, mesh=None) -> jax.Array:
+    """q (B,S,H,dh), k (B,T,KVH,dh), v (B,T,KVH,dv) -> (B,S,H,dv)."""
+    from repro.sharding.rules import constrain_batch
+    B, S, H, dh = q.shape
+    KVH = k.shape[2]
+    dv = v.shape[-1]
+    G = H // KVH
+    scale = dh ** -0.5
+
+    def block(q_blk, qpos_blk):
+        qg = q_blk.reshape(B, q_blk.shape[1], KVH, G, dh)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = constrain_batch(scores, mesh)
+        mask = attention_mask(qpos_blk, kv_positions, causal=causal,
+                              window=window, kv_len=kv_len)
+        probs = _scores_to_probs(scores, mask[:, None, None], softcap)
+        out = jnp.einsum("bkgst,btkv->bskgv", probs.astype(v.dtype), v)
+        return constrain_batch(out.reshape(B, q_blk.shape[1], H, dv), mesh)
+
+    if q_chunk <= 0 or S <= q_chunk or S % q_chunk != 0:
+        return block(q, q_positions)
+
+    n = S // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, dh).swapaxes(0, 1)
+    ps = q_positions.reshape(B, n, q_chunk).swapaxes(0, 1)
+    # checkpoint each chunk: backward recomputes its (chunk, T) score matrix
+    # instead of keeping every chunk's scores live (memory-critical at 32k)
+    from repro.flags import scan_unroll
+    blk = jax.checkpoint(block)
+    _, out = jax.lax.scan(lambda _, args: (None, blk(*args)), None, (qs, ps),
+                          unroll=scan_unroll())
+    return out.swapaxes(0, 1).reshape(B, S, H, dv)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def build_gqa(b: Builder, cfg: ModelConfig):
+    D, H, KVH, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b.param("wq", (D, H * dh), ("embed_fsdp", "heads"))
+    b.param("wk", (D, KVH * dh), ("embed_fsdp", "kv_heads"))
+    b.param("wv", (D, KVH * dh), ("embed_fsdp", "kv_heads"))
+    b.param("wo", (H * dh, D), ("heads", "embed_fsdp"))
+    if cfg.qk_norm:
+        build_rmsnorm(b, dh, "q_norm")
+        build_rmsnorm(b, dh, "k_norm")
+
+
+def gqa_qkv(params, x: jax.Array, cfg: ModelConfig,
+            positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, KVH, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, dh)
+    k = (x @ params["wk"]).reshape(B, S, KVH, dh)
+    v = (x @ params["wv"]).reshape(B, S, KVH, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params, q, cfg.norm_eps, "q_norm")
+        k = rmsnorm(params, k, cfg.norm_eps, "k_norm")
+    q = apply_rope(q, positions, cfg.rope_base)
+    k = apply_rope(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+def apply_gqa(params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, kind: str = "global",
+              cache: Optional[dict] = None,
+              cache_index: Optional[jax.Array] = None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """One attention layer. With ``cache`` performs decode-style KV append.
+
+    ``cross_kv`` (k, v) switches to cross-attention (whisper decoder):
+    no causal mask, no cache update of the provided kv.
+    """
+    B, S, _ = x.shape
+    window = cfg.sliding_window if kind == "local" else 0
+
+    if cross_kv is not None:
+        q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+        k, v = cross_kv
+        T = k.shape[1]
+        out = dense_attention(
+            q, k, v, positions,
+            jnp.broadcast_to(jnp.arange(T), (B, T)),
+            causal=False, q_chunk=cfg.q_chunk)
+        return out.reshape(B, S, -1) @ params["wo"], cache
+
+    q, k, v = gqa_qkv(params, x, cfg, positions)
+
+    if cache is None:
+        kv_positions = positions
+        out = dense_attention(q, k, v, positions, kv_positions, causal=True,
+                              window=window, softcap=cfg.attn_logit_softcap,
+                              q_chunk=cfg.q_chunk)
+        return out.reshape(B, S, -1) @ params["wo"], None
+
+    # decode: append S new tokens at cache_index, attend over full cache
+    T = cache["k"].shape[1]
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+        cache["k"].dtype), cache_index, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+        cache["v"].dtype), cache_index, axis=1)
+    new_cache = dict(cache, k=k_cache, v=v_cache)
+    kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    out = dense_attention(q, k_cache, v_cache, positions, kv_positions,
+                          causal=True, window=window,
+                          softcap=cfg.attn_logit_softcap,
+                          kv_len=cache_index + S)
+    return out.reshape(B, S, -1) @ params["wo"], new_cache

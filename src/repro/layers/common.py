@@ -1,0 +1,106 @@
+"""Shared primitives: RMSNorm, RoPE, MLPs, embedding / output head."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import Builder
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def build_rmsnorm(b: Builder, dim: int, name: str = "scale"):
+    b.param(name, (dim,), ("embed",), init="ones")
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6,
+            name: str = "scale") -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params[name].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, base: float) -> jax.Array:
+    return 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, base)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / squared-relu / gelu)
+# ---------------------------------------------------------------------------
+
+def build_mlp(b: Builder, d_model: int, d_ff: int, activation: str,
+              ff_axis: str = "mlp"):
+    if activation == "swiglu":
+        b.param("w_gate", (d_model, d_ff), ("embed_fsdp", ff_axis))
+    b.param("w_up", (d_model, d_ff), ("embed_fsdp", ff_axis))
+    b.param("w_down", (d_ff, d_model), (ff_axis, "embed_fsdp"))
+
+
+def mlp(params, x: jax.Array, activation: str) -> jax.Array:
+    h = x @ params["w_up"]
+    if activation == "swiglu":
+        g = x @ params["w_gate"]
+        h = jax.nn.silu(g) * h
+    elif activation == "relu2":          # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(activation)
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding + (chunked) output head
+# ---------------------------------------------------------------------------
+
+def build_embedding(b: Builder, cfg: ModelConfig):
+    b.param("embedding", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+            scale=1.0)
+    if not cfg.tie_embeddings:
+        b.param("unembed", (cfg.d_model, cfg.vocab_size), ("embed_fsdp", "vocab"))
+
+
+def embed(params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    e = params["embedding"][tokens]
+    if cfg.tie_embeddings:   # gemma-style scaled embeddings
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    return e
+
+
+def unembed_matrix(params, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embedding"].T
+    return params["unembed"]
+
+
+def logits_from_hidden(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = h @ unembed_matrix(params, cfg)
+    if cfg.final_logit_softcap > 0:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

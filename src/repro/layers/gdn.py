@@ -1,0 +1,82 @@
+"""Gated DeltaNet (GDN) and SimpleGDN linear-attention variants.
+
+Reproduces the efficient-attention ablation of GLM-5 §2.1.2 / Table 5:
+
+* **GDN** [Yang et al., ICLR'24]: gated linear recurrence with delta rule —
+  S_t = g_t * S_{t-1} * (I − β_t k_t k_tᵀ) + β_t v_t k_tᵀ,  y_t = S_t q_t,
+  with a short conv + explicit gating (extra parameters).
+* **SimpleGDN** (GLM-5's proposal): maximal reuse of pre-trained weights —
+  the Q/K/V projections are mapped directly into the recurrence; Conv1d and
+  explicit gating removed; decay is a single learned per-head scalar.  No new
+  parameter matrices, which is the point (continual-training adaptation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import apply_rope
+from repro.layers.ssm import causal_conv
+from repro.sharding.rules import Builder
+
+
+def build_gdn(b: Builder, cfg: ModelConfig, simple: bool = False):
+    D, H, dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    b.param("wq", (D, H * dh), ("embed_fsdp", "heads"))
+    b.param("wk", (D, H * dh), ("embed_fsdp", "heads"))
+    b.param("wv", (D, H * dh), ("embed_fsdp", "heads"))
+    b.param("wo", (H * dh, D), ("heads", "embed_fsdp"))
+    b.param("w_beta", (D, H), ("embed", None), scale=0.02)
+    if simple:
+        b.param("decay", (H,), (None,), init="zeros")   # sigmoid -> per-head g
+    else:
+        b.param("w_gate", (D, H), ("embed", None), scale=0.02)
+        b.param("conv_w", (cfg.ssm_conv, H * dh), ("conv", "heads"),
+                scale=1.0 / cfg.ssm_conv)
+        b.param("conv_b", (H * dh,), ("heads",), init="zeros")
+
+
+def _delta_scan(q, k, v, beta, g):
+    """q,k,v (B,S,H,dh); beta,g (B,S,H). Returns y (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(S_, inp):
+        qt, kt, vt, bt, gt = inp
+        kk = jnp.einsum("bhd,bhe->bhde", kt, kt)
+        S_ = gt[..., None, None] * (
+            S_ - bt[..., None, None] * jnp.einsum("bhde,bhef->bhdf", S_, kk))
+        S_ = S_ + bt[..., None, None] * jnp.einsum("bhd,bhe->bhde", vt, kt)
+        y = jnp.einsum("bhde,bhe->bhd", S_, qt)
+        return S_, y
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32)
+               for a in (q, k, v, beta, g))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1)
+
+
+def apply_gdn(params, x: jax.Array, cfg: ModelConfig, *,
+              simple: bool = False) -> jax.Array:
+    B, S, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(B, S, H, dh)
+    k = (x @ params["wk"]).reshape(B, S, H, dh)
+    v = (x @ params["wv"]).reshape(B, S, H, dh)
+    if not simple:
+        qf = q.reshape(B, S, H * dh)
+        qf, _ = causal_conv(qf, params["conv_w"], params["conv_b"])
+        q = qf.reshape(B, S, H, dh)
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+    k = k / jnp.maximum(jnp.linalg.norm(k, axis=-1, keepdims=True), 1e-6)
+    beta = jax.nn.sigmoid(x @ params["w_beta"])               # (B,S,H)
+    if simple:
+        g = jnp.broadcast_to(jax.nn.sigmoid(params["decay"])[None, None],
+                             (B, S, H))
+    else:
+        g = jax.nn.sigmoid(x @ params["w_gate"])
+    y = _delta_scan(q, k, v, beta, g).astype(x.dtype)
+    return y.reshape(B, S, H * dh) @ params["wo"]

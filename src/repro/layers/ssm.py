@@ -1,0 +1,182 @@
+"""Selective state-space layers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training/prefill uses a time scan (``lax.scan``) as the exact reference; the
+Pallas ``mamba_scan`` kernel implements the chunked TPU version and is
+checked against this.  Decode carries (conv_state, ssm_state) per layer —
+O(1) per token, which is what qualifies the SSM/hybrid archs for the
+``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import build_rmsnorm, rmsnorm
+from repro.sharding.rules import Builder
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d (shared by mamba1/2)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                conv_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,C), w (W,C) depthwise. Returns (y, new_conv_state (B,W-1,C))."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, C), x.dtype)
+    xx = jnp.concatenate([conv_state, x], axis=1)          # (B, W-1+S, C)
+    y = sum(xx[:, i:i + S, :] * w[i][None, None, :] for i in range(W))
+    y = y + bias[None, None, :]
+    return jax.nn.silu(y), xx[:, -(W - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def build_mamba1(b: Builder, cfg: ModelConfig):
+    D, E, N, R, W = (cfg.d_model, d_inner(cfg), cfg.ssm_state, dt_rank(cfg),
+                     cfg.ssm_conv)
+    b.param("in_proj", (D, 2 * E), ("embed_fsdp", "ssm_inner"))
+    b.param("conv_w", (W, E), ("conv", "ssm_inner"), scale=1.0 / W)
+    b.param("conv_b", (E,), ("ssm_inner",), init="zeros")
+    b.param("x_proj", (E, R + 2 * N), ("ssm_inner", None))
+    b.param("dt_proj", (R, E), ("lora", "ssm_inner"))
+    b.param("dt_bias", (E,), ("ssm_inner",), init="zeros")
+    b.param("A_log", (E, N), ("ssm_inner", "ssm_state"), init="arange_log")
+    b.param("D", (E,), ("ssm_inner",), init="ones")
+    b.param("out_proj", (E, D), ("ssm_inner", "embed_fsdp"))
+
+
+def _mamba1_scan(dA, dBx, C, h0):
+    """dA (B,S,E,N), dBx (B,S,E,N), C (B,S,N) -> y (B,S,E), h_last."""
+    def step(h, inp):
+        da, dbx, c = inp
+        h = da * h + dbx
+        y = jnp.einsum("ben,bn->be", h, c)
+        return h, y
+    hT, ys = jax.lax.scan(step, h0,
+                          (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+                           C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT
+
+
+def apply_mamba1(params, x: jax.Array, cfg: ModelConfig, *,
+                 state: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """x (B,S,D). ``state`` = {'conv': (B,W-1,E), 'ssm': (B,E,N)} for decode."""
+    B, S, D = x.shape
+    E, N, R = d_inner(cfg), cfg.ssm_state, dt_rank(cfg)
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = causal_conv(xs, params["conv_w"], params["conv_b"],
+                               conv_state)
+    proj = xs @ params["x_proj"]                              # (B,S,R+2N)
+    dt_low, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_low @ params["dt_proj"]
+                         + params["dt_bias"][None, None])     # (B,S,E)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (E,N)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])
+    dBx = (dt.astype(jnp.float32) * xs.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[..., None, :]                # (B,S,E,N)
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, E, N), jnp.float32))
+    ys, hT = _mamba1_scan(dA, dBx, Cc.astype(jnp.float32), h0)
+    y = ys.astype(x.dtype) + xs * params["D"][None, None]
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": hT.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def mamba1_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    E, N, W = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    return {"conv": jnp.zeros((batch, W - 1, E), dtype),
+            "ssm": jnp.zeros((batch, E, N), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (scalar-A-per-head; ngroups=1)
+# ---------------------------------------------------------------------------
+
+def build_mamba2(b: Builder, cfg: ModelConfig):
+    D, E, N, W = cfg.d_model, d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    H = E // cfg.ssm_head_dim
+    b.param("in_proj", (D, 2 * E + 2 * N + H), ("embed_fsdp", "ssm_inner"))
+    b.param("conv_w", (W, E + 2 * N), ("conv", None), scale=1.0 / W)
+    b.param("conv_b", (E + 2 * N,), (None,), init="zeros")
+    b.param("A_log", (H,), (None,), init="arange_log")
+    b.param("dt_bias", (H,), (None,), init="zeros")
+    b.param("D", (H,), (None,), init="ones")
+    build_rmsnorm(b, E, "gate_norm")
+    b.param("out_proj", (E, D), ("ssm_inner", "embed_fsdp"))
+
+
+def _mamba2_scan(dA, x_dt, Bc, Cc, h0):
+    """dA (B,S,H), x_dt (B,S,H,P), Bc/Cc (B,S,N), h0 (B,H,P,N)."""
+    def step(h, inp):
+        da, xdt, bc, cc = inp
+        h = da[..., None, None] * h + xdt[..., None] * bc[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, cc)
+        return h, y
+    hT, ys = jax.lax.scan(step, h0, (dA.swapaxes(0, 1), x_dt.swapaxes(0, 1),
+                                     Bc.swapaxes(0, 1), Cc.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT                     # (B,S,H,P), (B,H,P,N)
+
+
+def apply_mamba2(params, x: jax.Array, cfg: ModelConfig, *,
+                 state: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, D = x.shape
+    E, N = d_inner(cfg), cfg.ssm_state
+    P_ = cfg.ssm_head_dim
+    H = E // P_
+    proj = x @ params["in_proj"]
+    z, xBC, dt_raw = jnp.split(proj, [E, 2 * E + 2 * N], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xs, Bc, Cc = jnp.split(xBC, [E, E + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])     # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (H,)
+    dA = jnp.exp(dt * A[None, None])                          # (B,S,H)
+    xh = xs.reshape(B, S, H, P_).astype(jnp.float32)
+    x_dt = xh * dt[..., None]
+    h0 = (state["ssm"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, H, P_, N), jnp.float32))
+    ys, hT = _mamba2_scan(dA, x_dt, Bc.astype(jnp.float32),
+                          Cc.astype(jnp.float32), h0)
+    y = ys + xh * params["D"][None, None, :, None]
+    y = y.reshape(B, S, E).astype(x.dtype)
+    y = rmsnorm(params, y * jax.nn.silu(z), cfg.norm_eps, "gate_norm")
+    out = y @ params["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": hT.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    E, N, W = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    H = E // cfg.ssm_head_dim
+    return {"conv": jnp.zeros((batch, W - 1, E + 2 * N), dtype),
+            "ssm": jnp.zeros((batch, H, cfg.ssm_head_dim, N), dtype)}

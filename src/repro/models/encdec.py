@@ -1,0 +1,197 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The mel-spectrogram + conv frontend is a STUB: the model consumes
+precomputed frame embeddings (B, encoder_seq_len, d_model) provided by
+``input_specs`` (the one sanctioned carve-out).  Encoder = bidirectional
+self-attention stack; decoder = causal self-attention + cross-attention.
+
+Decode shapes: the decoder is a standard causal LM over text tokens, so
+``decode_32k`` lowers a serve_step with a 32k self-attn KV cache + the fixed
+1500-frame cross-attn cache.  ``long_500k`` is skipped (DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention import apply_gqa, build_gqa, dense_attention
+from repro.layers.common import (build_embedding, build_mlp, build_rmsnorm,
+                                 embed, logits_from_hidden, mlp, rmsnorm,
+                                 unembed_matrix)
+from repro.models.losses import chunked_softmax_xent
+from repro.sharding.rules import Builder, constrain_batch, stack_init
+
+
+def _build_enc_layer(b: Builder, cfg: ModelConfig):
+    build_rmsnorm(b, cfg.d_model, "attn_norm")
+    build_gqa(b.sub("attn"), cfg)
+    build_rmsnorm(b, cfg.d_model, "mlp_norm")
+    build_mlp(b.sub("mlp"), cfg.d_model, cfg.d_ff, cfg.mlp_activation)
+
+
+def _build_dec_layer(b: Builder, cfg: ModelConfig):
+    build_rmsnorm(b, cfg.d_model, "attn_norm")
+    build_gqa(b.sub("attn"), cfg)
+    build_rmsnorm(b, cfg.d_model, "cross_norm")
+    build_gqa(b.sub("cross"), cfg)
+    build_rmsnorm(b, cfg.d_model, "mlp_norm")
+    build_mlp(b.sub("mlp"), cfg.d_model, cfg.d_ff, cfg.mlp_activation)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32,
+         abstract: bool = False) -> Tuple[Dict, Dict]:
+    b = Builder(key, dtype, abstract=abstract)
+    build_embedding(b.sub("embed"), cfg)
+    b.param("enc_pos", (cfg.encoder_seq_len, cfg.d_model),
+            ("seq", "embed"), scale=0.02)
+    enc_p, enc_s = stack_init(functools.partial(_build_enc_layer, cfg=cfg),
+                              cfg.encoder_layers, b._next_key(), dtype,
+                              abstract=abstract)
+    b.params["encoder"], b.specs["encoder"] = enc_p, enc_s
+    dec_p, dec_s = stack_init(functools.partial(_build_dec_layer, cfg=cfg),
+                              cfg.num_layers, b._next_key(), dtype,
+                              abstract=abstract)
+    b.params["decoder"], b.specs["decoder"] = dec_p, dec_s
+    build_rmsnorm(b, cfg.d_model, "enc_final_norm")
+    build_rmsnorm(b, cfg.d_model, "final_norm")
+    return b.params, b.specs
+
+
+def encode(params, frame_embeds: jax.Array, cfg: ModelConfig,
+           mesh=None) -> jax.Array:
+    """frame_embeds (B, F, D) -> encoder output (B, F, D)."""
+    B, F, D = frame_embeds.shape
+    h = constrain_batch(frame_embeds + params["enc_pos"][None, :F], mesh)
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def body(hc, lp):
+        x = rmsnorm(lp, hc, cfg.norm_eps, "attn_norm")
+        # bidirectional self-attention
+        from repro.layers.attention import gqa_qkv
+        q, k, v = gqa_qkv(lp["attn"], x, cfg, positions)
+        o = dense_attention(q, k, v, positions, positions, causal=False,
+                            q_chunk=cfg.q_chunk)
+        hc = hc + o.reshape(B, F, -1) @ lp["attn"]["wo"]
+        x = rmsnorm(lp, hc, cfg.norm_eps, "mlp_norm")
+        return constrain_batch(hc + mlp(lp["mlp"], x, cfg.mlp_activation),
+                               mesh), None
+
+    from repro.flags import scan_unroll
+    h, _ = jax.lax.scan(body, h, params["encoder"], unroll=scan_unroll())
+    return rmsnorm(params, h, cfg.norm_eps, "enc_final_norm")
+
+
+def _cross_kv(lp, enc_out: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    B, F, _ = enc_out.shape
+    KVH, dh = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ lp["cross"]["wk"]).reshape(B, F, KVH, dh)
+    v = (enc_out @ lp["cross"]["wv"]).reshape(B, F, KVH, dh)
+    return k, v
+
+
+def decoder_hidden(params, tokens: jax.Array, enc_out: jax.Array,
+                   cfg: ModelConfig, *, cache: Optional[dict] = None,
+                   cache_index=None, mesh=None
+                   ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S = tokens.shape
+    h = constrain_batch(embed(params["embed"], tokens, cfg), mesh)
+    start = cache_index if cache_index is not None else 0
+    positions = jnp.broadcast_to(jnp.arange(S) + start, (B, S))
+
+    def body(hc, xs):
+        lp, c = xs
+        x = rmsnorm(lp, hc, cfg.norm_eps, "attn_norm")
+        o, new_c = apply_gqa(lp["attn"], x, cfg, positions=positions,
+                             cache=c, cache_index=cache_index)
+        hc = hc + o
+        x = rmsnorm(lp, hc, cfg.norm_eps, "cross_norm")
+        ck, cv = _cross_kv(lp, enc_out, cfg)
+        o, _ = apply_gqa(lp["cross"], x, cfg, positions=positions,
+                         cross_kv=(ck, cv))
+        hc = hc + o
+        x = rmsnorm(lp, hc, cfg.norm_eps, "mlp_norm")
+        return constrain_batch(hc + mlp(lp["mlp"], x, cfg.mlp_activation),
+                               mesh), new_c
+
+    from repro.flags import scan_unroll
+    if cache is None:
+        h, _ = jax.lax.scan(lambda hc, lp: body(hc, (lp, None)), h,
+                            params["decoder"], unroll=scan_unroll())
+        new_cache = None
+    else:
+        h, new_self = jax.lax.scan(body, h, (params["decoder"],
+                                             cache["self"]),
+                                   unroll=scan_unroll())
+        new_cache = dict(cache, self=new_self)
+    return rmsnorm(params, h, cfg.norm_eps, "final_norm"), new_cache
+
+
+def hidden(params, tokens, cfg: ModelConfig, *, frontend_embeds=None,
+           cache=None, cache_index=None, mesh=None, sparse=None,
+           positions=None):
+    if cache is not None and "enc_out" in cache:
+        enc_out = cache["enc_out"]
+    else:
+        enc_out = encode(params, frontend_embeds, cfg, mesh=mesh)
+    h, new_cache = decoder_hidden(params, tokens, enc_out, cfg, cache=cache,
+                                  cache_index=cache_index, mesh=mesh)
+    if new_cache is not None:
+        new_cache["enc_out"] = enc_out
+    return h, jnp.zeros((), jnp.float32), new_cache
+
+
+def loss(params, batch, cfg: ModelConfig, *, sparse=None, mesh=None):
+    h, aux, _ = hidden(params, batch["tokens"], cfg,
+                       frontend_embeds=batch["frontend_embeds"])
+    mask = batch.get("loss_mask",
+                     jnp.ones_like(batch["targets"], jnp.float32))
+    W = unembed_matrix(params["embed"], cfg)
+    ce_sum, count = chunked_softmax_xent(h, W, batch["targets"], mask,
+                                         chunk=cfg.loss_chunk)
+    total = ce_sum / jnp.maximum(count, 1.0)
+    return total, {"ce": total, "loss": total, "aux": aux}
+
+
+def logits(params, tokens, cfg: ModelConfig, **kw):
+    h, _, _ = hidden(params, tokens, cfg, **kw)
+    return logits_from_hidden(params["embed"], h, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, abstract: bool = False) -> Tuple[dict, dict]:
+    from repro.utils import stack_tree, zeros
+    one = {"k": zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                      dtype, abstract),
+           "v": zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                      dtype, abstract)}
+    self_c = stack_tree(one, cfg.num_layers, abstract)
+    cache = {"self": self_c,
+             "enc_out": zeros((batch, cfg.encoder_seq_len, cfg.d_model),
+                              dtype, abstract)}
+    specs = {"self": {"k": ("layers", "batch", "kv_seq", "kv_heads",
+                            "head_dim"),
+                      "v": ("layers", "batch", "kv_seq", "kv_heads",
+                            "head_dim")},
+             "enc_out": ("batch", "seq", "embed")}
+    return cache, specs
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, frontend_embeds,
+            sparse=None, mesh=None):
+    h, _, new_cache = hidden(params, tokens, cfg,
+                             frontend_embeds=frontend_embeds, cache=cache,
+                             cache_index=jnp.zeros((), jnp.int32))
+    lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
+    return lg, new_cache
+
+
+def decode_step(params, token, cfg: ModelConfig, cache, cache_index,
+                *, sparse=None, mesh=None):
+    h, _, new_cache = hidden(params, token, cfg, cache=cache,
+                             cache_index=cache_index)
+    return logits_from_hidden(params["embed"], h, cfg), new_cache

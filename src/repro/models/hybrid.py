@@ -1,0 +1,171 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one SHARED attention block.
+
+``cfg.hybrid_attn_every`` mamba2 layers form a group; after each group the
+single shared attention block (one parameter set, zamba2's signature trick)
+is applied.  Each invocation gets its own KV-cache slot.  DSA applies to the
+shared attention block only (the mamba layers are already linear-time).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import (build_embedding, build_mlp, build_rmsnorm,
+                                 embed, logits_from_hidden, mlp, rmsnorm,
+                                 unembed_matrix)
+from repro.layers.ssm import apply_mamba2, build_mamba2, mamba2_state
+from repro.models import transformer as tfm
+from repro.models.losses import chunked_softmax_xent
+from repro.sharding.rules import Builder, constrain_batch, stack_init
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.hybrid_attn_every == 0
+    return cfg.num_layers // cfg.hybrid_attn_every
+
+
+def _build_mamba_layer(b: Builder, cfg: ModelConfig):
+    build_rmsnorm(b, cfg.d_model, "norm")
+    build_mamba2(b.sub("mamba"), cfg)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32,
+         abstract: bool = False) -> Tuple[Dict, Dict]:
+    b = Builder(key, dtype, abstract=abstract)
+    build_embedding(b.sub("embed"), cfg)
+    params, specs = stack_init(
+        functools.partial(_build_mamba_layer, cfg=cfg), cfg.num_layers,
+        b._next_key(), dtype, abstract=abstract)
+    b.params["layers"] = params
+    b.specs["layers"] = specs
+    # ONE shared attention block (attention + MLP), reused at every interval
+    tfm.build_block(b.sub("shared_attn"), cfg, "global", moe=False)
+    build_rmsnorm(b, cfg.d_model, "final_norm")
+    return b.params, b.specs
+
+
+def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
+           cache: Optional[dict] = None, cache_index=None, mesh=None,
+           sparse: Optional[bool] = None, frontend_embeds=None,
+           positions=None) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    if sparse is None:
+        sparse = cfg.dsa is not None
+    B, S = tokens.shape
+    h = constrain_batch(embed(params["embed"], tokens, cfg), mesh)
+    if positions is None:
+        start = cache_index if cache_index is not None else 0
+        positions = jnp.broadcast_to(jnp.arange(S) + start, (B, S))
+    E = cfg.hybrid_attn_every
+    G = _n_groups(cfg)
+    lp = params["layers"]
+    # reshape stacked layer params to (G, E, ...)
+    lp_g = jax.tree.map(lambda x: x.reshape((G, E) + x.shape[1:]), lp)
+
+    def group(carry, xs):
+        h_carry = carry
+        gp, g_ssm, g_kv = xs
+
+        def mamba_body(hc, ys):
+            one_p, one_st = ys
+            x = rmsnorm(one_p, hc, cfg.norm_eps, "norm")
+            y, new_st = apply_mamba2(one_p["mamba"], x, cfg, state=one_st)
+            return constrain_batch(hc + y, mesh), new_st
+
+        from repro.flags import scan_unroll
+        h_carry, new_ssm = jax.lax.scan(mamba_body, h_carry, (gp, g_ssm),
+                                        unroll=scan_unroll())
+        h_carry, new_kv, _ = tfm.apply_block(
+            params["shared_attn"], h_carry, cfg, positions, "global",
+            moe=False, sparse=sparse, mesh=mesh, cache=g_kv,
+            cache_index=cache_index)
+        return h_carry, (new_ssm, new_kv)
+
+    if cache is None:
+        ssm_states = jax.tree.map(
+            lambda x: x.reshape((G, E) + x.shape[1:]),
+            _stacked_ssm_state(cfg, B, h.dtype))
+        kv = None
+        def group_nokv(carry, xs):
+            gp, g_ssm = xs
+            out, _ = group(carry, (gp, g_ssm, None))
+            return out, None
+        # states are still threaded (scan needs uniform xs) but discarded
+        from repro.flags import scan_unroll
+        h, _ = jax.lax.scan(group_nokv, h, (lp_g, ssm_states),
+                            unroll=scan_unroll())
+        return rmsnorm(params, h, cfg.norm_eps, "final_norm"), \
+            jnp.zeros((), jnp.float32), None
+
+    ssm_g = jax.tree.map(lambda x: x.reshape((G, E) + x.shape[1:]),
+                         cache["ssm"])
+    from repro.flags import scan_unroll
+    h, (new_ssm, new_kv) = jax.lax.scan(group, h, (lp_g, ssm_g, cache["kv"]),
+                                        unroll=scan_unroll())
+    new_cache = {"ssm": jax.tree.map(
+        lambda x: x.reshape((G * E,) + x.shape[2:]), new_ssm),
+        "kv": new_kv}
+    h = rmsnorm(params, h, cfg.norm_eps, "final_norm")
+    return h, jnp.zeros((), jnp.float32), new_cache
+
+
+def _stacked_ssm_state(cfg: ModelConfig, batch: int, dtype):
+    one = mamba2_state(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+
+
+def loss(params, batch, cfg: ModelConfig, *, sparse=None, mesh=None):
+    h, aux, _ = hidden(params, batch["tokens"], cfg, sparse=sparse,
+                       mesh=mesh)
+    mask = batch.get("loss_mask",
+                     jnp.ones_like(batch["targets"], jnp.float32))
+    W = unembed_matrix(params["embed"], cfg)
+    ce_sum, count = chunked_softmax_xent(h, W, batch["targets"], mask,
+                                         chunk=cfg.loss_chunk)
+    total = ce_sum / jnp.maximum(count, 1.0)
+    return total, {"ce": total, "loss": total, "aux": aux}
+
+
+def logits(params, tokens, cfg: ModelConfig, **kw):
+    h, _, _ = hidden(params, tokens, cfg, **kw)
+    return logits_from_hidden(params["embed"], h, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, abstract: bool = False) -> Tuple[dict, dict]:
+    from repro.utils import stack_tree
+    G = _n_groups(cfg)
+    ssm = _stacked_ssm_state(cfg, batch, dtype)
+    if abstract:
+        ssm = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           ssm)
+    kv_one = tfm._layer_cache(cfg, batch, max_len, "global", dtype, abstract)
+    kv = stack_tree(kv_one, G, abstract)
+    ssm_specs = {"conv": ("layers", "batch", "conv", None),
+                 "ssm": ("layers", "batch", "heads", None, "ssm_state")}
+    kv_specs = jax.tree.map(
+        lambda ax: ("layers",) + ax, tfm.cache_specs(cfg, "global"),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return {"ssm": ssm, "kv": kv}, {"ssm": ssm_specs, "kv": kv_specs}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, *, sparse=None,
+            mesh=None, **kw):
+    h, _, new_cache = hidden(params, tokens, cfg, cache=cache,
+                             cache_index=jnp.zeros((), jnp.int32),
+                             sparse=sparse, mesh=mesh)
+    lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
+    return lg, new_cache
+
+
+def decode_step(params, token, cfg: ModelConfig, cache, cache_index,
+                *, sparse=None, mesh=None):
+    h, _, new_cache = hidden(params, token, cfg, cache=cache,
+                             cache_index=cache_index, sparse=sparse,
+                             mesh=mesh)
+    return logits_from_hidden(params["embed"], h, cfg), new_cache

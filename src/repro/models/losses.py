@@ -1,0 +1,65 @@
+"""Sequence-chunked output projection + cross-entropy (GLM-5 §2.4.1).
+
+The output projection and fp32 loss promotion dominate transient memory at
+long sequence length × 256k vocab; chunking the sequence bounds the live
+logits to (B, chunk, V) — forward AND backward (each chunk's projection is
+recomputed in backward via the scan).  This is the canonical implementation;
+``repro.kernels.chunked_ce`` validates its Pallas variant against it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_softmax_xent(h: jax.Array, unembed: jax.Array,
+                         targets: jax.Array, mask: jax.Array, *,
+                         chunk: int = 512, softcap: float = 0.0
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """h (B,S,D), unembed (D,V), targets/mask (B,S) ->
+    (sum of masked token NLL, number of masked-in tokens)."""
+    B, S, D = h.shape
+
+    def chunk_loss(h_c, t_c, m_c):
+        logits = (h_c @ unembed).astype(jnp.float32)
+        if softcap > 0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        nll = logz - ll
+        return jnp.sum(nll * m_c), jnp.sum(m_c)
+
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        return chunk_loss(h, targets, mask.astype(jnp.float32))
+
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).swapaxes(0, 1)
+    ts = targets.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask.astype(jnp.float32).reshape(B, n, chunk).swapaxes(0, 1)
+    # checkpoint each chunk so the (B, chunk, V) logits are recomputed in
+    # backward rather than all chunks kept live (the §2.4.1 memory win)
+    ckpt_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        acc_l, acc_c = carry
+        l, c = ckpt_loss(*xs)
+        return (acc_l + l, acc_c + c), None
+
+    from repro.flags import scan_unroll
+    (loss, count), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                    (hs, ts, ms), unroll=scan_unroll())
+    return loss, count
+
+
+def mean_xent(h, unembed, targets, mask, *, chunk=512, softcap=0.0):
+    loss, count = chunked_softmax_xent(h, unembed, targets, mask,
+                                       chunk=chunk, softcap=softcap)
+    return loss / jnp.maximum(count, 1.0)
+
+
+def token_logprobs(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """logits (B,S,V), tokens (B,S) -> log pi(token) (B,S) in fp32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]

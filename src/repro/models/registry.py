@@ -1,0 +1,30 @@
+"""Model registry: family -> implementation module.
+
+Every module implements the same functional interface:
+  init(key, cfg, dtype) -> (params, specs)
+  hidden(params, tokens, cfg, **kw) -> (h, aux, cache')
+  loss(params, batch, cfg, *, sparse=None, mesh=None) -> (scalar, metrics)
+  logits(params, tokens, cfg, **kw) -> (B,S,V)
+  init_cache(cfg, batch, max_len, dtype) -> (cache, logical_specs)
+  prefill(params, tokens, cfg, cache, **kw) -> (last_logits, cache')
+  decode_step(params, token, cfg, cache, cache_index, **kw) -> (logits, cache')
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm_model, transformer
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": encdec,
+    "ssm": ssm_model,
+    "hybrid": hybrid,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY[cfg.family]

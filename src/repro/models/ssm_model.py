@@ -1,0 +1,112 @@
+"""Attention-free Mamba-1 LM (falcon-mamba-7b).
+
+No DSA (nothing to sparsify — DESIGN.md §Arch-applicability); decode state is
+O(1) per layer, so ``long_500k`` is native.  Muon still applies to the 2-D
+projection params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.common import (build_embedding, build_rmsnorm, embed,
+                                 logits_from_hidden, rmsnorm, unembed_matrix)
+from repro.layers.ssm import (apply_mamba1, build_mamba1, d_inner,
+                              mamba1_state)
+from repro.models.losses import chunked_softmax_xent
+from repro.sharding.rules import Builder, constrain_batch, stack_init
+
+
+def _build_layer(b: Builder, cfg: ModelConfig):
+    build_rmsnorm(b, cfg.d_model, "norm")
+    build_mamba1(b.sub("mamba"), cfg)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32,
+         abstract: bool = False) -> Tuple[Dict, Dict]:
+    b = Builder(key, dtype, abstract=abstract)
+    build_embedding(b.sub("embed"), cfg)
+    params, specs = stack_init(functools.partial(_build_layer, cfg=cfg),
+                               cfg.num_layers, b._next_key(), dtype,
+                               abstract=abstract)
+    b.params["layers"] = params
+    b.specs["layers"] = specs
+    build_rmsnorm(b, cfg.d_model, "final_norm")
+    return b.params, b.specs
+
+
+def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
+           state: Optional[dict] = None, mesh=None, sparse=None,
+           frontend_embeds=None, positions=None, cache=None,
+           cache_index=None) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    # ``cache`` alias for state keeps the registry interface uniform.
+    if state is None and cache is not None:
+        state = cache
+    h = constrain_batch(embed(params["embed"], tokens, cfg), mesh)
+
+    def body(h_carry, xs):
+        lp, st = xs
+        x = rmsnorm(lp, h_carry, cfg.norm_eps, "norm")
+        y, new_st = apply_mamba1(lp["mamba"], x, cfg, state=st)
+        return constrain_batch(h_carry + y, mesh), new_st
+
+    if state is None:
+        def body_nostate(h_carry, lp):
+            x = rmsnorm(lp, h_carry, cfg.norm_eps, "norm")
+            y, _ = apply_mamba1(lp["mamba"], x, cfg, state=None)
+            return constrain_batch(h_carry + y, mesh), None
+        from repro.flags import scan_unroll
+        h, _ = jax.lax.scan(body_nostate, h, params["layers"],
+                            unroll=scan_unroll())
+        new_state = None
+    else:
+        from repro.flags import scan_unroll
+        h, new_state = jax.lax.scan(body, h, (params["layers"], state),
+                                    unroll=scan_unroll())
+
+    h = rmsnorm(params, h, cfg.norm_eps, "final_norm")
+    return h, jnp.zeros((), jnp.float32), new_state
+
+
+def loss(params, batch, cfg: ModelConfig, *, sparse=None, mesh=None):
+    h, aux, _ = hidden(params, batch["tokens"], cfg, mesh=mesh)
+    mask = batch.get("loss_mask",
+                     jnp.ones_like(batch["targets"], jnp.float32))
+    W = unembed_matrix(params["embed"], cfg)
+    ce_sum, count = chunked_softmax_xent(h, W, batch["targets"], mask,
+                                         chunk=cfg.loss_chunk)
+    total = ce_sum / jnp.maximum(count, 1.0)
+    return total, {"ce": total, "loss": total,
+                   "aux": jnp.zeros((), jnp.float32)}
+
+
+def logits(params, tokens, cfg: ModelConfig, **kw):
+    h, _, _ = hidden(params, tokens, cfg, **kw)
+    return logits_from_hidden(params["embed"], h, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32, abstract: bool = False) -> Tuple[dict, dict]:
+    """'Cache' for an SSM = stacked per-layer recurrent state (length-free)."""
+    from repro.utils import stack_tree
+    one = mamba1_state(cfg, batch, dtype)
+    state = stack_tree(one, cfg.num_layers, abstract)
+    specs = {"conv": ("layers", "batch", "conv", "ssm_inner"),
+             "ssm": ("layers", "batch", "ssm_inner", "ssm_state")}
+    return state, specs
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, **kw):
+    h, _, new_state = hidden(params, tokens, cfg, state=cache)
+    lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
+    return lg, new_state
+
+
+def decode_step(params, token, cfg: ModelConfig, cache, cache_index=None,
+                *, sparse=None, mesh=None):
+    h, _, new_state = hidden(params, token, cfg, state=cache)
+    return logits_from_hidden(params["embed"], h, cfg), new_state

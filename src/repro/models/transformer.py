@@ -1,0 +1,435 @@
+"""Decoder-only transformer covering the dense / MoE / VLM families.
+
+Composable pieces: GQA or MLA attention (optionally DSA-sparse on 'global'
+layers), dense or expert-parallel MoE FFN, alternating local/global
+attention patterns (gemma2), logit softcap, squared-ReLU (nemotron), qk-norm
+(qwen3), vision/audio frontend embeddings (phi-3-vision), and the MTP head
+with parameter sharing.
+
+Layers are stacked per pattern-slot and iterated with ``lax.scan`` so the
+94-layer archs compile in seconds.  All params are built through the
+sharding Builder, so every leaf carries logical axes for pjit + Muon Split.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import dsa as dsa_mod
+from repro.core import mla as mla_mod
+from repro.core import mtp as mtp_mod
+from repro.layers.attention import (attention_mask, build_gqa,
+                                    dense_attention, gqa_qkv)
+from repro.layers.common import (build_embedding, build_mlp, build_rmsnorm,
+                                 embed, logits_from_hidden, mlp, rmsnorm,
+                                 unembed_matrix)
+from repro.layers.moe import apply_moe, build_moe
+from repro.models.losses import chunked_softmax_xent, mean_xent
+from repro.sharding.rules import (Builder, constrain_batch,
+                                  constrain_batch_seq, stack_init)
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _block_is_moe(cfg: ModelConfig) -> bool:
+    return cfg.num_experts > 0
+
+
+def build_block(b: Builder, cfg: ModelConfig, kind: str, moe: bool):
+    build_rmsnorm(b, cfg.d_model, "attn_norm")
+    ab = b.sub("attn")
+    if cfg.attention_type == "mla":
+        mla_mod.build_mla(ab, cfg)
+    else:
+        build_gqa(ab, cfg)
+    if cfg.dsa is not None and kind == "global":
+        dsa_mod.build_indexer(b.sub("idx"), cfg)
+    build_rmsnorm(b, cfg.d_model, "mlp_norm")
+    if moe:
+        build_moe(b.sub("moe"), cfg)
+    else:
+        build_mlp(b.sub("mlp"), cfg.d_model, cfg.d_ff, cfg.mlp_activation)
+
+
+def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
+            kind: str, *, sparse: bool, cache: Optional[dict],
+            cache_index: Optional[jax.Array], mesh=None
+            ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Attention sub-layer on normed hidden h.
+    Returns (out, new_cache, indexer aux loss)."""
+    zero = jnp.zeros((), jnp.float32)
+    B, S, D = h.shape
+    window = cfg.sliding_window if kind == "local" else 0
+    use_dsa = sparse and "idx" in params and kind == "global"
+
+    if cfg.attention_type == "mla":
+        ap = params["attn"]
+        if cache is None:
+            if use_dsa:
+                q, k, v, _, _ = mla_mod.mla_qkv(ap, h, cfg, positions)
+                k_idx = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
+                out, ind_kl = dsa_mod.dsa_attention(
+                    params["idx"], q, k, v, h, k_idx, positions, positions,
+                    cfg, q_chunk=min(cfg.q_chunk, 256), mesh=mesh,
+                    with_indexer_loss=True)
+                return out.reshape(B, S, -1) @ ap["wo"], None, ind_kl
+            return mla_mod.apply_mla(ap, h, cfg, positions=positions,
+                                     mesh=mesh), None, zero
+        # decode over latent cache (absorbed MQA path)
+        out, c_cache, kr_cache = mla_mod.mla_decode_absorbed(
+            ap, h, cfg, c_cache=cache["c"], kr_cache=cache["kr"],
+            cache_index=cache_index, positions=positions)
+        new_cache = dict(cache, c=c_cache, kr=kr_cache)
+        if "k_idx" in cache:
+            ki = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa) \
+                if "idx" in params else None
+            if ki is not None:
+                new_cache["k_idx"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_idx"], ki.astype(cache["k_idx"].dtype),
+                    cache_index, axis=1)
+        return out, new_cache, zero
+
+    # ----- GQA path -----
+    ap = params["attn"]
+    q, k, v = gqa_qkv(ap, h, cfg, positions)
+    if cache is None:
+        kv_positions = positions
+        kv_len = None
+        k_full, v_full = k, v
+        new_cache = None
+    else:
+        k_full = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+        v_full = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+        new_cache = dict(cache, k=k_full, v=v_full)
+        T = k_full.shape[1]
+        kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        kv_len = cache_index + S
+
+    if use_dsa:
+        if cache is None:
+            k_idx = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
+        else:
+            ki_new = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
+            k_idx = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_idx"], ki_new.astype(cache["k_idx"].dtype),
+                cache_index, axis=1)
+            new_cache["k_idx"] = k_idx
+        if cache is None:   # training: indexer KL is the indexer's gradient
+            out, ind_kl = dsa_mod.dsa_attention(
+                params["idx"], q, k_full, v_full, h, k_idx, positions,
+                kv_positions, cfg, kv_len=kv_len, window=window,
+                softcap=cfg.attn_logit_softcap,
+                q_chunk=min(cfg.q_chunk, 256), mesh=mesh,
+                with_indexer_loss=True)
+            return out.reshape(B, S, -1) @ ap["wo"], new_cache, ind_kl
+        out = dsa_mod.dsa_attention(
+            params["idx"], q, k_full, v_full, h, k_idx, positions,
+            kv_positions, cfg, kv_len=kv_len, window=window,
+            softcap=cfg.attn_logit_softcap, q_chunk=min(cfg.q_chunk, 256),
+            mesh=mesh)
+    else:
+        out = dense_attention(q, k_full, v_full, positions, kv_positions,
+                              causal=True, window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              kv_len=kv_len,
+                              q_chunk=cfg.q_chunk if cache is None else 0,
+                              mesh=mesh)
+    return out.reshape(B, S, -1) @ ap["wo"], new_cache, zero
+
+
+def apply_block(params, h: jax.Array, cfg: ModelConfig,
+                positions: jax.Array, kind: str, moe: bool, *,
+                sparse: bool = False, mesh=None,
+                cache: Optional[dict] = None,
+                cache_index: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    _cb = constrain_batch_seq if cfg.seq_parallel else constrain_batch
+    h = _cb(h, mesh)
+    a_in = rmsnorm(params, h, cfg.norm_eps, "attn_norm")
+    a_out, new_cache, ind_kl = _attend(params, a_in, cfg, positions, kind,
+                                       sparse=sparse, cache=cache,
+                                       cache_index=cache_index, mesh=mesh)
+    h = h + _cb(a_out, mesh)
+    m_in = rmsnorm(params, h, cfg.norm_eps, "mlp_norm")
+    if moe:
+        m_out, aux = apply_moe(params["moe"], m_in, cfg, mesh=mesh)
+    else:
+        m_out = mlp(params["mlp"], m_in, cfg.mlp_activation)
+        aux = jnp.zeros((), jnp.float32)
+    # indexer KL coefficient 0.01 (small; it only trains the indexer)
+    return h + _cb(m_out, mesh), new_cache, aux + 0.01 * ind_kl
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
+         abstract: bool = False) -> Tuple[Dict, Dict]:
+    b = Builder(key, dtype, abstract=abstract)
+    build_embedding(b.sub("embed"), cfg)
+    pattern = cfg.attention_pattern
+    P = len(pattern)
+    L_scan = cfg.num_layers - cfg.first_k_dense
+    assert L_scan % P == 0, (cfg.num_layers, cfg.first_k_dense, pattern)
+    moe = _block_is_moe(cfg)
+    for i in range(cfg.first_k_dense):
+        build_block(b.sub(f"dense_{i}"), cfg, "global", moe=False)
+    n_groups = L_scan // P
+    for j, kind in enumerate(pattern):
+        params, specs = stack_init(
+            functools.partial(build_block, cfg=cfg, kind=kind, moe=moe),
+            n_groups, b._next_key(), dtype, abstract=abstract)
+        b.params[f"slot{j}"] = params
+        b.specs[f"slot{j}"] = specs
+    build_rmsnorm(b, cfg.d_model, "final_norm")
+    if cfg.mtp is not None:
+        mtp_mod.build_mtp(
+            b.sub("mtp"), cfg,
+            functools.partial(build_block, cfg=cfg, kind="global", moe=False))
+    return b.params, b.specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
+                 caches: Optional[dict], cache_index):
+    """Scan over layer groups; caches is {'slotJ': stacked_cache} or None.
+
+    Without caches (training) the scan body covers ``remat_group``
+    consecutive pattern-groups under ONE jax.checkpoint: the activation tape
+    holds h every remat_group·P layers (paper §2.4.1's offloading analogue —
+    trade recompute for tape size).
+    """
+    pattern = cfg.attention_pattern
+    P = len(pattern)
+    moe = _block_is_moe(cfg)
+    slot_params = tuple(params[f"slot{j}"] for j in range(P))
+    n_groups = jax.tree.leaves(slot_params[0])[0].shape[0]
+
+    def one_group(h, aux, group_params, group_caches):
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            c_j = group_caches[j] if group_caches is not None else None
+            h, c_new, a = apply_block(group_params[j], h, cfg,
+                                      positions=positions, kind=kind,
+                                      moe=moe, sparse=sparse, mesh=mesh,
+                                      cache=c_j, cache_index=cache_index)
+            new_caches.append(c_new)
+            aux = aux + a
+        return h, aux, new_caches
+
+    if caches is not None:
+        def body(carry, xs):
+            h, aux = carry
+            gp, gc = xs
+            h, aux, new_caches = one_group(h, aux, gp, gc)
+            return (h, aux), tuple(new_caches)
+
+        from repro.flags import scan_unroll
+        slot_caches = tuple(caches[f"slot{j}"] for j in range(P))
+        (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    (slot_params, slot_caches),
+                                    unroll=scan_unroll())
+        return h, aux, {f"slot{j}": ys[j] for j in range(P)}
+
+    # training path: super-group scan with one checkpoint per R groups
+    R = cfg.remat_group if (cfg.remat == "full"
+                            and n_groups % max(cfg.remat_group, 1) == 0) \
+        else 1
+    n_super = n_groups // R
+    sp = jax.tree.map(
+        lambda x: x.reshape((n_super, R) + x.shape[1:]), slot_params)
+
+    def super_body_inner(gp_super, h, aux):
+        for i in range(R):
+            gp = jax.tree.map(lambda x: x[i], gp_super)
+            h, aux, _ = one_group(h, aux, gp, None)
+        return h, aux
+
+    fn = super_body_inner
+    if cfg.remat == "full":
+        fn = jax.checkpoint(super_body_inner)
+
+    def body(carry, gp_super):
+        h, aux = carry
+        h, aux = fn(gp_super, h, aux)
+        return (h, aux), None
+
+    from repro.flags import scan_unroll
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), sp,
+                               unroll=scan_unroll())
+    return h, aux, None
+
+
+def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
+           frontend_embeds: Optional[jax.Array] = None,
+           positions: Optional[jax.Array] = None,
+           sparse: Optional[bool] = None, mesh=None,
+           cache: Optional[dict] = None,
+           cache_index: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Returns (final-normed hidden (B,S_total,D), aux loss, new cache)."""
+    if sparse is None:
+        sparse = cfg.dsa is not None
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens, cfg)
+    if frontend_embeds is not None:
+        h = jnp.concatenate([frontend_embeds.astype(h.dtype), h], axis=1)
+    h = constrain_batch(h, mesh)
+    S_total = h.shape[1]
+    if positions is None:
+        start = cache_index if cache_index is not None else 0
+        positions = jnp.broadcast_to(jnp.arange(S_total) + start,
+                                     (B, S_total))
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = dict(cache) if cache is not None else None
+    for i in range(cfg.first_k_dense):
+        c_i = cache[f"dense_{i}"] if cache is not None else None
+        h, c_new, a = apply_block(params[f"dense_{i}"], h, cfg, positions,
+                                  "global", moe=False, sparse=sparse,
+                                  mesh=mesh, cache=c_i,
+                                  cache_index=cache_index)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache[f"dense_{i}"] = c_new
+    h, aux_s, scan_caches = _scan_groups(
+        params, h, cfg, positions, sparse=sparse, mesh=mesh,
+        caches={k: v for k, v in cache.items() if k.startswith("slot")}
+        if cache is not None else None,
+        cache_index=cache_index)
+    aux = aux + aux_s
+    if new_cache is not None and scan_caches is not None:
+        new_cache.update(scan_caches)
+    h = rmsnorm(params, h, cfg.norm_eps, "final_norm")
+    return h, aux, new_cache
+
+
+def logits(params, tokens: jax.Array, cfg: ModelConfig, **kw) -> jax.Array:
+    """Full-vocab logits — small configs only (RL, MTP verification)."""
+    h, _, _ = hidden(params, tokens, cfg, **kw)
+    return logits_from_hidden(params["embed"], h, cfg)
+
+
+def loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+         sparse: Optional[bool] = None, mesh=None
+         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    targets = batch["targets"]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    fe = batch.get("frontend_embeds")
+    h, aux, _ = hidden(params, tokens, cfg, frontend_embeds=fe,
+                       sparse=sparse, mesh=mesh)
+    F = fe.shape[1] if fe is not None else 0
+    h_text = h[:, F:]
+    W = unembed_matrix(params["embed"], cfg)
+    ce_sum, count = chunked_softmax_xent(
+        h_text, W, targets, mask, chunk=cfg.loss_chunk,
+        softcap=cfg.final_logit_softcap)
+    ce = ce_sum / jnp.maximum(count, 1.0)
+    total = ce + aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp is not None:
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        embed_fn = lambda t: embed(params["embed"], t, cfg)  # noqa: E731
+        llf = lambda hh, tg, valid: mean_xent(   # noqa: E731
+            hh, W, tg, mask * valid, chunk=cfg.loss_chunk,
+            softcap=cfg.final_logit_softcap)
+        ab = lambda p, x, pos: apply_block(    # noqa: E731
+            p, x, cfg, pos, "global", False, sparse=False, mesh=mesh)[0]
+        mtp_loss = mtp_mod.mtp_train_losses(
+            params["mtp"], cfg, h_text, tokens, targets, positions,
+            embed_fn, llf, ab)
+        total = total + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+                 dtype, abstract: bool = False) -> dict:
+    from repro.utils import zeros
+    if cfg.attention_type == "mla":
+        m = cfg.mla
+        c = {"c": zeros((batch, max_len, m.kv_lora_dim), dtype, abstract),
+             "kr": zeros((batch, max_len, m.qk_rope_dim), dtype, abstract)}
+    else:
+        c = {"k": zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                        dtype, abstract),
+             "v": zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                        dtype, abstract)}
+    if cfg.dsa is not None and kind == "global":
+        c["k_idx"] = zeros((batch, max_len, cfg.dsa.index_head_dim),
+                           dtype, abstract)
+    return c
+
+
+def cache_specs(cfg: ModelConfig, kind: str) -> dict:
+    """Logical axes for one layer's cache (length axis = 'kv_seq')."""
+    if cfg.attention_type == "mla":
+        c = {"c": ("batch", "kv_seq", "lora"),
+             "kr": ("batch", "kv_seq", None)}
+    else:
+        c = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+             "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+    if cfg.dsa is not None and kind == "global":
+        c["k_idx"] = ("batch", "kv_seq", None)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
+               abstract: bool = False) -> Tuple[dict, dict]:
+    """Returns (cache pytree, logical-spec pytree)."""
+    from repro.utils import stack_tree
+    pattern = cfg.attention_pattern
+    P = len(pattern)
+    n_groups = (cfg.num_layers - cfg.first_k_dense) // P
+    cache, specs = {}, {}
+    for i in range(cfg.first_k_dense):
+        cache[f"dense_{i}"] = _layer_cache(cfg, batch, max_len, "global",
+                                           dtype, abstract)
+        specs[f"dense_{i}"] = cache_specs(cfg, "global")
+    for j, kind in enumerate(pattern):
+        one = _layer_cache(cfg, batch, max_len, kind, dtype, abstract)
+        cache[f"slot{j}"] = stack_tree(one, n_groups, abstract)
+        specs[f"slot{j}"] = jax.tree.map(
+            lambda ax: ("layers",) + ax, cache_specs(cfg, kind),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+    return cache, specs
+
+
+def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
+            frontend_embeds: Optional[jax.Array] = None, sparse=None,
+            mesh=None) -> Tuple[jax.Array, dict]:
+    """Fill the cache with the prompt; returns (last-position logits, cache)."""
+    h, _, new_cache = hidden(params, tokens, cfg,
+                             frontend_embeds=frontend_embeds, sparse=sparse,
+                             mesh=mesh, cache=cache,
+                             cache_index=jnp.zeros((), jnp.int32))
+    lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
+    return lg, new_cache
+
+
+def decode_step(params, token: jax.Array, cfg: ModelConfig, cache: dict,
+                cache_index: jax.Array, *, sparse=None, mesh=None
+                ) -> Tuple[jax.Array, dict]:
+    """token (B,1) -> (logits (B,1,V), new cache).  One serve_step."""
+    h, _, new_cache = hidden(params, token, cfg, sparse=sparse, mesh=mesh,
+                             cache=cache, cache_index=cache_index)
+    return logits_from_hidden(params["embed"], h, cfg), new_cache

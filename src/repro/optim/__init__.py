@@ -1,0 +1,1 @@
+from repro.optim import muon, schedule  # noqa: F401

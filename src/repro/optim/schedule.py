@@ -1,0 +1,26 @@
+"""LR schedules matching the GLM-5 recipe (Appendix A): linear warmup then
+cosine decay to a floor; constant and linear options for mid-training/DSA
+stages."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, floor: float, warmup: int,
+                  total: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def linear(step, *, start: float, end: float, total: int):
+    prog = jnp.clip(jnp.asarray(step, jnp.float32) / max(total, 1), 0, 1)
+    return start + (end - start) * prog
+
+
+def constant(step, *, value: float):
+    return jnp.full((), value, jnp.float32)

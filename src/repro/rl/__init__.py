@@ -1,0 +1,3 @@
+from repro.rl.async_is import async_is_loss, calibration_mask, staleness_keep  # noqa: F401
+from repro.rl.distill import onpolicy_distill_loss  # noqa: F401
+from repro.rl.grpo import group_advantages, grpo_icepop_loss, pop_mask  # noqa: F401

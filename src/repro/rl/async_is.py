@@ -1,0 +1,78 @@
+"""Direct Double-sided Importance Sampling (GLM-5 §4.1.2, Eq. 3–5).
+
+The asynchronous-RL objective: rollout engines are several weight-versions
+stale, and tracking the exact behavior policy π_old would require a
+checkpoint history.  GLM-5 instead (a) reuses the log-probs RECORDED AT
+ROLLOUT TIME as the behavior proxy, r_t = exp(logπ_θ − logπ_rollout), and
+(b) hard-masks tokens whose ratio leaves [1−ε_ℓ, 1+ε_h] (double-sided
+calibration f(·), Eq. 5) instead of PPO's clipping — masked tokens
+contribute no gradient at all.
+
+  L(θ) = E_t[ f(r_t; ε_ℓ, ε_h) · Â_t · log π_θ(a_t|s_t) ]      (Eq. 3)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def calibration_mask(r: jax.Array, eps_low: float = 0.2,
+                     eps_high: float = 0.2) -> jax.Array:
+    """f(x; ε_ℓ, ε_h) support indicator (Eq. 5)."""
+    return ((r > 1.0 - eps_low) & (r < 1.0 + eps_high)).astype(jnp.float32)
+
+
+class AsyncISStats(NamedTuple):
+    loss: jax.Array
+    kept_frac: jax.Array
+    mean_ratio: jax.Array
+
+
+def async_is_loss(logp_theta: jax.Array, logp_rollout: jax.Array,
+                  advantages: jax.Array, mask: jax.Array, *,
+                  eps_low: float = 0.2, eps_high: float = 0.2
+                  ) -> AsyncISStats:
+    """Eq. 3-5.  logp_* (B,T); advantages (B,); mask (B,T) = model tokens.
+
+    Note the ``sg`` structure: the ratio r_t acts as a weight (stop-grad),
+    the gradient flows through log π_θ — exactly the Eq. 3 estimator.
+    """
+    r = jnp.exp(jax.lax.stop_gradient(logp_theta) - logp_rollout)   # Eq. 4
+    f = calibration_mask(r, eps_low, eps_high) * mask               # Eq. 5
+    w = jax.lax.stop_gradient(f * r) * advantages[:, None]
+    tok = jnp.maximum(mask.sum(), 1.0)
+    loss = -(w * logp_theta).sum() / tok                            # Eq. 3
+    return AsyncISStats(loss=loss, kept_frac=f.sum() / tok,
+                        mean_ratio=(r * mask).sum() / tok)
+
+
+def staleness_keep(version_min: jax.Array, current_version: int,
+                   tau: int) -> jax.Array:
+    """§4.1.2 'dropping off-policy samples': drop if w' − w₀ > τ.
+
+    ``version_min`` (B,) = oldest rollout-engine weight version per sample.
+    Returns boolean keep mask."""
+    return (current_version - version_min) <= tau
+
+
+def pad_or_drop_group(valid: jax.Array) -> jax.Array:
+    """§4.1.2 noisy-sample handling for one group (G,) of validity flags:
+    returns per-sample REPLICATION COUNTS summing to G if >half the group is
+    valid (pad by repeating valid samples round-robin), else all zeros (drop
+    the whole group)."""
+    G = valid.shape[0]
+    n_valid = valid.sum()
+    order = jnp.argsort(~valid)        # valid first
+    ranks = jnp.where(valid[order], jnp.arange(G), G)
+    needed = G - n_valid
+    extra = jnp.where(jnp.arange(G) < jnp.minimum(needed, n_valid), 1, 0)
+    # distribute 'needed' extra copies over the first valid samples (cyclic)
+    base = jnp.where(valid[order], 1, 0)
+    reps = base + jnp.where(valid[order],
+                            (needed // jnp.maximum(n_valid, 1))
+                            + (jnp.arange(G) < needed %
+                               jnp.maximum(n_valid, 1)), 0)
+    counts = jnp.zeros(G, jnp.int32).at[order].set(reps.astype(jnp.int32))
+    return jnp.where(n_valid > G // 2, counts, jnp.zeros(G, jnp.int32))

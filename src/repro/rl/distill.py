@@ -1,0 +1,49 @@
+"""On-policy cross-stage distillation (GLM-5 §3.5, Eq. 2).
+
+The FINAL post-training stage: stage-expert checkpoints (Reasoning-RL,
+General-RL teachers) distill back into the student to undo cross-stage
+forgetting.  Same loss as Eq. 1 but the advantage is replaced by the
+per-token teacher/student log-ratio:
+
+    Â_t = sg[ log π_teacher(y_t|·) − log π_student(y_t|·) ]      (Eq. 2)
+
+Group size 1 (no group statistics needed — the advantage is direct), batch
+1024 in the paper; rollouts come from the STUDENT (on-policy).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.grpo import pop_mask
+
+
+class DistillStats(NamedTuple):
+    loss: jax.Array
+    mean_gap: jax.Array
+    kept_frac: jax.Array
+
+
+def onpolicy_distill_loss(logp_student: jax.Array,
+                          logp_teacher: jax.Array,
+                          logp_infer: jax.Array,
+                          mask: jax.Array, *,
+                          beta: float = 2.0,
+                          eps_low: float = 0.2,
+                          eps_high: float = 0.28) -> DistillStats:
+    """All (B, T) per-token logprobs of the SAMPLED tokens.
+
+    ``logp_infer``: student's inference-engine logprobs at sampling time
+    (the pop() mismatch gate is kept from Eq. 1).
+    """
+    adv = jax.lax.stop_gradient(logp_teacher - logp_student)      # Eq. 2
+    rho = jnp.exp(jax.lax.stop_gradient(logp_student) - logp_infer)
+    keep = pop_mask(rho, beta) * mask
+    # r = π_train/π_train_old = 1 on-policy; loss reduces to -E[adv · logp]
+    tok = jnp.maximum(mask.sum(), 1.0)
+    loss = -(keep * adv * logp_student).sum() / tok
+    return DistillStats(loss=loss,
+                        mean_gap=(adv * mask).sum() / tok,
+                        kept_frac=keep.sum() / tok)

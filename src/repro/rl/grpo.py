@@ -1,0 +1,72 @@
+"""GRPO + IcePop — GLM-5's Reasoning-RL objective (Eq. 1, §3.2).
+
+Distinctions the paper draws and we implement exactly:
+
+* π_train vs π_infer: rollouts are sampled by the INFERENCE engine whose
+  numerics differ from the training engine (bf16 vs fp32 here; FP8 in the
+  paper).  The per-token mismatch ratio ρ = π_train_old / π_infer gates the
+  loss through the IcePop ``pop`` operator: tokens with ρ outside [1/β, β]
+  are dropped (gradient-masked).  No KL term (removed vs original IcePop).
+* PPO-style asymmetric clip with ε_low=0.2, ε_high=0.28 (paper defaults).
+* group-normalized advantage over G samples per prompt.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """rewards (n_prompts, G) -> normalized advantages (n_prompts, G)."""
+    mean = rewards.mean(axis=1, keepdims=True)
+    std = rewards.std(axis=1, keepdims=True)
+    return (rewards - mean) / (std + eps)
+
+
+def pop_mask(rho: jax.Array, beta: float = 2.0) -> jax.Array:
+    """IcePop pop(·): keep tokens whose train/infer mismatch is in
+    [1/β, β]; zero (mask) the rest."""
+    return ((rho >= 1.0 / beta) & (rho <= beta)).astype(jnp.float32)
+
+
+class GRPOStats(NamedTuple):
+    loss: jax.Array
+    kept_frac: jax.Array
+    clip_frac: jax.Array
+    mean_ratio: jax.Array
+    entropy_proxy: jax.Array
+
+
+def grpo_icepop_loss(logp_train: jax.Array,
+                     logp_train_old: jax.Array,
+                     logp_infer: jax.Array,
+                     advantages: jax.Array,
+                     mask: jax.Array, *,
+                     beta: float = 2.0,
+                     eps_low: float = 0.2,
+                     eps_high: float = 0.28) -> GRPOStats:
+    """Eq. 1.  All logprob tensors are (B, T) per-token; ``advantages``
+    (B,) per-sequence (outcome reward); ``mask`` (B, T) marks model-generated
+    tokens (environment/tool tokens excluded per §4.1).
+    """
+    rho = jnp.exp(logp_train_old - logp_infer)            # train-infer mismatch
+    keep = pop_mask(rho, beta) * mask
+    r = jnp.exp(logp_train - logp_train_old)              # PPO ratio
+    adv = advantages[:, None]
+    unclipped = r * adv
+    clipped = jnp.clip(r, 1.0 - eps_low, 1.0 + eps_high) * adv
+    per_tok = jnp.minimum(unclipped, clipped)
+    # 1/|y| length normalization, then group mean
+    tok_count = jnp.maximum(mask.sum(axis=1), 1.0)
+    per_seq = (keep * per_tok).sum(axis=1) / tok_count
+    loss = -per_seq.mean()
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return GRPOStats(
+        loss=loss,
+        kept_frac=keep.sum() / denom,
+        clip_frac=((clipped < unclipped) * mask).sum() / denom,
+        mean_ratio=(r * mask).sum() / denom,
+        entropy_proxy=-(logp_train * mask).sum() / denom,
+    )

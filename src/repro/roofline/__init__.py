@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (Roofline, analyze, collective_bytes,
+                                     model_flops, active_param_count)
+
+__all__ = ["Roofline", "analyze", "collective_bytes", "model_flops",
+           "active_param_count"]

@@ -1,0 +1,209 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+  compute_s    = HLO_FLOPs_per_device / 197e12        (bf16 peak per chip)
+  memory_s     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+  collective_s = collective_bytes_per_device / 50e9   (per-link ICI)
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-DEVICE flops
+and bytes (verified empirically: a (256,4096)x(4096,8192) matmul over 512
+devices reports ~1/512 of the global FLOPs).  collective bytes are parsed
+from the partitioned HLO text: we sum the *result* shape bytes of every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+(shapes in partitioned HLO are already per-device).  For all-reduce the wire
+cost of a ring is 2·(n-1)/n ≈ 2× the buffer; we apply per-op multipliers so
+the term reflects wire bytes, not buffer bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+# ring-algorithm wire multipliers (bytes moved per device / buffer bytes)
+WIRE_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\(?[a-z0-9\[\],\s{}]+?\)?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes per collective type, from partitioned HLO."""
+    out: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2).lower()
+        b = _shape_bytes(shape_str) * WIRE_MULT[op]
+        out[op] = out.get(op, 0.0) + b
+        count[op] = count.get(op, 0) + 1
+    out["_counts"] = count  # type: ignore
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float           # MODEL_FLOPS / (HLO flops × chips)
+    peak_memory_bytes: int        # per-device args+temp from memory_analysis
+    argument_bytes: int
+    temp_bytes: int
+    output_bytes: int
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Primary accounting comes from the trip-count-aware HLO parser
+    (repro.roofline.hlo_parse) because ``cost_analysis()`` counts while
+    bodies once; the raw cost_analysis numbers are kept in the record as a
+    cross-check (they form a lower bound).
+    """
+    from repro.roofline.hlo_parse import analyze_hlo
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    parsed = analyze_hlo(txt)
+    flops = parsed.flops or float(ca.get("flops", 0.0))
+    byts = parsed.bytes or float(ca.get("bytes accessed", 0.0))
+    colls = dict(parsed.coll)
+    colls["_raw_cost_analysis_flops"] = float(ca.get("flops", 0.0))
+    colls["_raw_cost_analysis_bytes"] = float(ca.get("bytes accessed", 0.0))
+    counts = {}
+    cbytes = float(sum(v for k, v in parsed.coll.items()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / LINK_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    mem = compiled.memory_analysis()
+    total_hlo = flops * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=cbytes,
+        collectives={**colls, "counts": counts},
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        peak_memory_bytes=int(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes),
+        argument_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS estimates (6·N·D train, 2·N·D forward-only)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> float:
+    """Matmul parameters activated per token (MoE: top-k + shared experts),
+    excluding embeddings/unembed (standard 6ND convention)."""
+    D = cfg.d_model
+    n = 0.0
+    L = cfg.num_layers
+    # attention
+    if cfg.family in ("ssm",):
+        att = 0.0
+    elif cfg.attention_type == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        att = (D * m.q_lora_dim + m.q_lora_dim * cfg.num_heads * qk
+               + D * (m.kv_lora_dim + m.qk_rope_dim)
+               + m.kv_lora_dim * cfg.num_heads * (m.qk_nope_dim
+                                                  + m.v_head_dim)
+               + cfg.num_heads * m.v_head_dim * D)
+    else:
+        att = (D * cfg.num_heads * cfg.head_dim * 2
+               + D * cfg.num_kv_heads * cfg.head_dim * 2)
+    if cfg.dsa is not None:
+        att += D * (cfg.dsa.index_heads * cfg.dsa.index_head_dim
+                    + cfg.dsa.index_head_dim + cfg.dsa.index_heads)
+    # mlp per layer
+    gate = 3 if cfg.mlp_activation == "swiglu" else 2
+    if cfg.num_experts > 0:
+        k = cfg.experts_per_token + cfg.num_shared_experts
+        moe = k * gate * D * cfg.moe_d_ff + D * cfg.num_experts
+        dense_mlp = gate * D * cfg.d_ff
+        n += cfg.first_k_dense * (att + dense_mlp)
+        n += (L - cfg.first_k_dense) * (att + moe)
+    elif cfg.family == "ssm":
+        from repro.layers.ssm import d_inner, dt_rank
+        E = d_inner(cfg)
+        per = (D * 2 * E + E * (dt_rank(cfg) + 2 * cfg.ssm_state)
+               + dt_rank(cfg) * E + E * D)
+        n += L * per
+    elif cfg.family == "hybrid":
+        from repro.layers.ssm import d_inner
+        E = d_inner(cfg)
+        H = E // cfg.ssm_head_dim
+        per = D * (2 * E + 2 * cfg.ssm_state + H) + E * D
+        n += L * per
+        # ONE shared attention block counts once per invocation
+        inv = L // cfg.hybrid_attn_every
+        n += inv * (att + gate * D * cfg.d_ff)
+    else:
+        n += L * (att + gate * D * cfg.d_ff)
+    if cfg.family == "audio":
+        n += cfg.encoder_layers * (att + gate * D * cfg.d_ff)
+        n += L * (D * cfg.num_heads * cfg.head_dim * 2
+                  + D * cfg.num_kv_heads * cfg.head_dim * 2)  # cross attn
+    return n
+
+
+def model_flops(cfg, shape) -> float:
+    N = active_param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                   else (shape.seq_len if shape.kind ==
+                                         "prefill" else 1))
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * N * tokens

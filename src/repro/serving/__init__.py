@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.pd_sim import ServingConfig, Workload, simulate  # noqa: F401
+from repro.serving.speculative import measure_accept_length  # noqa: F401

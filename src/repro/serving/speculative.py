@@ -1,0 +1,78 @@
+"""MTP speculative decoding + accept-length measurement (GLM-5 Table 2).
+
+The MTP layer acts as the draft model: from the trunk hidden state at the
+current position it proposes ``n`` future tokens (recursively feeding its
+own draft back in — which is exactly why the paper's parameter sharing
+matters: a single-layer-trained MTP head only ever saw step-1 inputs during
+training, so its step-2/3 drafts are out-of-distribution and get rejected
+more).  Verification runs the full model over the drafted tokens; the
+accept length is 1 + the greedy-matching prefix (standard speculative
+decoding, greedy variant).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import mtp as mtp_mod
+from repro.layers.common import embed, logits_from_hidden
+from repro.models import transformer as tfm
+
+
+def mtp_draft(params, cfg: ModelConfig, h_last: jax.Array,
+              last_token: jax.Array, positions: jax.Array, n: int
+              ) -> jax.Array:
+    """h_last (B,1,D) trunk hidden at the last accepted position;
+    last_token (B,1).  Returns drafted tokens (B, n) (greedy)."""
+    apply_block = lambda p, x, pos: tfm.apply_block(   # noqa: E731
+        p, x, cfg, pos, "global", False, sparse=False)[0]
+    h = h_last
+    tok = last_token
+    drafts = []
+    for j in range(n):
+        e = embed(params["embed"], tok, cfg)
+        h = mtp_mod.mtp_step(params["mtp"], cfg, h, e, positions + j, j,
+                             apply_block)
+        logits = logits_from_hidden(params["embed"], h, cfg)
+        tok = jnp.argmax(logits, axis=-1)
+        drafts.append(tok[:, 0])
+    return jnp.stack(drafts, axis=1)
+
+
+def verify_and_accept(params, cfg: ModelConfig, prefix: jax.Array,
+                      drafts: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Run the full model over prefix+drafts; returns (accept_len (B,),
+    verified greedy tokens (B, n))."""
+    B, n = drafts.shape
+    toks = jnp.concatenate([prefix, drafts], axis=1)
+    logits = tfm.logits(params, toks, cfg, sparse=False)
+    P = prefix.shape[1]
+    # model's greedy prediction for draft slot j comes from position P-1+j
+    verify = jnp.argmax(logits[:, P - 1:P - 1 + n], axis=-1)
+    acc = mtp_mod.speculative_accept_length(drafts, verify)
+    return acc, verify
+
+
+def measure_accept_length(params, cfg: ModelConfig, prompts: jax.Array,
+                          *, n_steps: int = 8) -> Dict[str, float]:
+    """Average accept length over a batch of prompts, decoding ``n_steps``
+    speculative rounds per prompt (greedy everywhere)."""
+    B, P = prompts.shape
+    n = cfg.mtp.num_predict
+    toks = prompts
+    total, rounds = 0.0, 0
+    for _ in range(n_steps):
+        h, _, _ = tfm.hidden(params, toks, cfg, sparse=False)
+        last_h = h[:, -1:]
+        last_tok = toks[:, -1:]
+        positions = jnp.full((B, 1), toks.shape[1] - 1)
+        drafts = mtp_draft(params, cfg, last_h, last_tok, positions, n)
+        acc, verify = verify_and_accept(params, cfg, toks, drafts)
+        total += float(acc.mean())
+        rounds += 1
+        # append the verified tokens (use model's own greedy continuation)
+        toks = jnp.concatenate([toks, verify], axis=1)
+    return {"accept_length": total / rounds, "speculative_steps": n}

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (Builder, DEFAULT_RULES, constrain,
+                                  make_rules, resolve_spec, spec_leaf,
+                                  stack_init, tree_shardings)
+
+__all__ = ["Builder", "DEFAULT_RULES", "constrain", "make_rules",
+           "resolve_spec", "spec_leaf", "stack_init", "tree_shardings"]

@@ -1,0 +1,34 @@
+"""Small shared helpers (abstract-array construction for the dry-run path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros(shape, dtype, abstract: bool = False):
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+    return jnp.zeros(shape, dtype)
+
+
+def stack_tree(tree, n: int, abstract: bool = False):
+    """Prepend a leading axis of size n to every leaf."""
+    if abstract:
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((n,) + tuple(x.shape), x.dtype),
+            tree)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+def abstract_like(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype), tree)
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_size(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))

@@ -1,0 +1,108 @@
+"""Async-RL infrastructure tests: TITO gateway, router affinity, heartbeat
+eviction, buffer hygiene (GLM-5 §3.6, §4.1)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.async_rl.buffer import TrajectoryBuffer
+from repro.async_rl.heartbeat import HeartbeatMonitor
+from repro.async_rl.router import DPRouter, RoundRobinRouter
+from repro.async_rl.tito import (TitoGateway, ToyTokenizer, Trajectory,
+                                 misalignment_rate, text_roundtrip)
+
+
+def _traj(tokens, versions=(0,), reward=0.0, fail=False):
+    return Trajectory(rollout_id="r", task="t",
+                      prompt=np.array([1, 2], np.int32),
+                      tokens=np.asarray(tokens, np.int32),
+                      logprobs=np.zeros(len(tokens), np.float32),
+                      versions=list(versions), reward=reward,
+                      env_failure=fail)
+
+
+def test_tito_fragment_assembly():
+    gw = TitoGateway()
+    rid = gw.new_rollout("swe")
+    gw.record(rid, [1, 2, 3], [-0.1, -0.2, -0.3], weight_version=0)
+    gw.record(rid, [4, 5], [-0.4, -0.5], weight_version=2)
+    t = gw.finish(rid, "swe", np.array([9]), reward=1.0)
+    np.testing.assert_array_equal(t.tokens, [1, 2, 3, 4, 5])
+    np.testing.assert_allclose(t.logprobs, [-0.1, -0.2, -0.3, -0.4, -0.5])
+    assert t.versions == [0, 2] and t.version_min == 0
+
+
+def test_text_roundtrip_corrupts_alignment():
+    """The text-in-text-out baseline merges adjacent pairs -> misalignment;
+    TITO by construction has zero."""
+    tok = ToyTokenizer(vocab=32)
+    t = _traj([4, 5, 7, 2, 10, 11])      # (4,5) and (10,11) merge
+    rt = text_roundtrip(t, tok)
+    assert len(rt.tokens) < len(t.tokens)
+    assert misalignment_rate(t, tok) > 0
+    clean = _traj([3, 5, 7, 9])          # no mergeable pairs
+    assert misalignment_rate(clean, tok) == 0.0
+
+
+def test_router_affinity_and_reuse():
+    r = DPRouter(n_ranks=4)
+    rank0 = r.route("roll-1")
+    for _ in range(5):
+        assert r.route("roll-1") == rank0       # stable across turns
+    # growing context reuses the KV prefix
+    r.request("roll-1", 100)
+    inc = r.request("roll-1", 150)
+    assert inc == 50
+    assert r.stats["hits"] == 1
+
+
+def test_round_robin_misses_kv():
+    rr = RoundRobinRouter(n_ranks=4)
+    dp = DPRouter(n_ranks=4)
+    for rid in ("a", "b", "c", "d"):
+        for turn in range(1, 5):
+            rr.request(rid, 100 * turn)
+            dp.request(rid, 100 * turn)
+    assert dp.stats["prefill_tokens"] < rr.stats["prefill_tokens"]
+
+
+def test_router_rebalance():
+    r = DPRouter(n_ranks=2, rebalance_threshold=1.2)
+    for i in range(64):
+        r.route(f"x-{i}")
+    loads = sorted(r.load.values())
+    assert loads[-1] - loads[0] <= max(4, 0.3 * sum(loads) / 2)
+
+
+def test_heartbeat_eviction_and_rerouting():
+    mon = HeartbeatMonitor(timeout_s=0.05)
+    mon.register("s0")
+    mon.register("s1")
+    mon.beat("s0")
+    time.sleep(0.08)
+    mon.beat("s1")          # s1 alive, s0 lapsed
+    evicted = mon.sweep()
+    assert evicted == ["s0"]
+    assert mon.healthy_servers() == ["s1"]
+    mon.beat("s0")          # dead servers cannot resurrect via beat
+    assert not mon.is_healthy("s0")
+
+
+def test_buffer_staleness_and_groups():
+    buf = TrajectoryBuffer(group_size=4, staleness_tau=2)
+    # stale sample dropped
+    buf.add("g0", _traj([1], versions=[0]), current_version=5)
+    assert buf.stats["stale_dropped"] == 1
+    # group with 1 failure -> padded
+    for i in range(3):
+        buf.add("g1", _traj([1], versions=[5], reward=1.0), 5)
+    buf.add("g1", _traj([1], versions=[5], fail=True), 5)
+    assert buf.stats["groups_padded"] == 1
+    g = buf.pop_groups(1)[0]
+    assert len(g) == 4 and all(not t.env_failure for t in g)
+    # group with majority failures -> dropped
+    for i in range(3):
+        buf.add("g2", _traj([1], versions=[5], fail=True), 5)
+    buf.add("g2", _traj([1], versions=[5]), 5)
+    assert buf.stats["groups_dropped"] == 1
+    assert buf.n_ready() == 0

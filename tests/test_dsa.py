@@ -1,0 +1,128 @@
+"""DSA correctness: top-k determinism, sparse==dense at k>=T, causality,
+block selector, indexer warm-up distillation (paper §2.1.1, §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DSAConfig
+from repro.core import dsa
+from repro.layers.attention import attention_mask, dense_attention
+from repro.models import get_model
+
+
+def _qkv(B=2, S=64, H=4, KVH=2, dh=16, key=0):
+    ks = jax.random.split(jax.random.key(key), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KVH, dh))
+    v = jax.random.normal(ks[2], (B, S, KVH, dh))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return q, k, v, pos
+
+
+def test_topk_deterministic():
+    scores = jax.random.normal(jax.random.key(0), (2, 8, 64))
+    # introduce ties
+    scores = jnp.round(scores * 4) / 4
+    mask = jnp.ones((2, 8, 64), bool)
+    idx1, _ = dsa.select_topk(scores, mask, 16, deterministic=True)
+    idx2, _ = dsa.select_topk(scores, mask, 16, deterministic=True)
+    np.testing.assert_array_equal(np.asarray(idx1), np.asarray(idx2))
+
+
+def test_topk_nondeterministic_differs_on_ties():
+    scores = jnp.zeros((1, 4, 64))          # all tied
+    mask = jnp.ones((1, 4, 64), bool)
+    idx1, _ = dsa.select_topk(scores, mask, 8, deterministic=False,
+                              noise_key=jax.random.key(1))
+    idx2, _ = dsa.select_topk(scores, mask, 8, deterministic=False,
+                              noise_key=jax.random.key(2))
+    assert not np.array_equal(np.asarray(idx1), np.asarray(idx2))
+
+
+def test_sparse_equals_dense_when_k_full():
+    """With k >= T every (valid) token is selected -> sparse == dense."""
+    q, k, v, pos = _qkv()
+    scores = jax.random.normal(jax.random.key(9), (2, 64, 64))
+    mask = attention_mask(pos, pos, causal=True)
+    idx, valid = dsa.select_topk(scores, mask, 64)
+    sparse = dsa.sparse_token_attention(q, k, v, idx, valid, pos, pos)
+    dense = dense_attention(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sparse_respects_causality():
+    """Gradient/attn of position t must not see tokens > t even if the
+    selector (adversarially) proposed them."""
+    q, k, v, pos = _qkv(key=3)
+    B, S = 2, 64
+    idx = jnp.broadcast_to(jnp.arange(8)[None, None], (B, S, 8)) + 40
+    valid = jnp.ones((B, S, 8), bool)
+    out = dsa.sparse_token_attention(q, k, v, idx.astype(jnp.int32), valid,
+                                     pos, pos)
+    # queries before position 40 have NO valid keys -> softmax over empty set
+    # must still be finite
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_block_selector_covers_selected_tokens():
+    scores = jax.random.normal(jax.random.key(4), (1, 64, 64))
+    pos = jnp.broadcast_to(jnp.arange(64), (1, 64))
+    mask = attention_mask(pos, pos, causal=True)
+    bidx, bval = dsa.select_topk_blocks(scores, mask, k=32, block_size=16)
+    assert bidx.shape == (1, 4, 2)
+    # block ids within range and causally plausible (block start <= q block end)
+    assert int(bidx.max()) < 4
+    q_of_blk = jnp.arange(4)[None, :, None]
+    assert bool(jnp.all(jnp.where(bval, bidx <= q_of_blk, True)))
+
+
+def test_indexer_warmup_distillation_improves():
+    """Warm-up stage (§2.1.1): training ONLY the indexer against the dense
+    attention distribution reduces the KL and improves top-k recall."""
+    cfg = get_smoke_config("yi_6b")
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(0), cfg)
+    lp = jax.tree.map(lambda x: x[0], params["slot0"])
+    idx_p = lp["idx"]
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask = attention_mask(pos, pos, causal=True)
+
+    from repro.layers.attention import gqa_qkv
+    q, k, v = gqa_qkv(lp["attn"], x, cfg, pos)
+    kr = jnp.repeat(k, cfg.num_heads // cfg.num_kv_heads, 2)
+    s = jnp.einsum("bshd,bthd->bhst", q, kr) * (cfg.head_dim ** -0.5)
+    s = jnp.where(mask[:, None], s, -1e30)      # (B,H,S,T)
+    attn = jax.nn.softmax(s, -1).mean(1)        # (B,S,T) head-mean
+
+    def loss_fn(ip):
+        ki = dsa.indexer_keys(ip, x, cfg.dsa)
+        sc = dsa.indexer_scores(ip, x, ki, cfg.dsa)
+        return dsa.indexer_distill_loss(sc, attn, mask)
+
+    l0 = float(loss_fn(idx_p))
+    p = idx_p
+    for _ in range(25):
+        g = jax.grad(loss_fn)(p)
+        p = jax.tree.map(lambda a, b: a - 0.5 * b, p, g)
+    l1 = float(loss_fn(p))
+    assert l1 < l0 * 0.9, (l0, l1)
+
+
+def test_model_sparse_dense_consistency_full_k():
+    """Model-level: DSA path with top_k >= seq == dense path logits."""
+    cfg = get_smoke_config("yi_6b")
+    cfg = cfg.replace(dsa=DSAConfig(index_heads=2, index_head_dim=16,
+                                    top_k=4096, block_size=16))
+    model = get_model(cfg)
+    params, _ = model.init(jax.random.key(0), cfg)
+    tok = jax.random.randint(jax.random.key(2), (1, 64), 0, cfg.vocab_size)
+    sparse_logits = model.logits(params, tok, cfg, sparse=True)
+    dense_logits = model.logits(params, tok, cfg, sparse=False)
+    np.testing.assert_allclose(np.asarray(sparse_logits),
+                               np.asarray(dense_logits),
+                               atol=2e-4, rtol=2e-4)

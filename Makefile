@@ -1,0 +1,17 @@
+# Tier-1 verify and friends.  `make test` is what CI runs.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test collect bench-serving dev-deps
+
+test:
+	$(PY) -m pytest -q
+
+collect:
+	$(PY) -m pytest -q --collect-only
+
+bench-serving:
+	$(PY) -m benchmarks.serving_throughput
+
+dev-deps:
+	$(PY) -m pip install -r requirements-dev.txt

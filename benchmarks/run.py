@@ -18,6 +18,7 @@ SUITES = [
     ("context_mgmt", "Figure 8: context management strategies"),
     ("rl_async", "S3.6/S4.1: async RL infra"),
     ("pd_disagg", "S3.6.2: PD disaggregation tail latency"),
+    ("serving_throughput", "S3.6: continuous vs static batching tok/s"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

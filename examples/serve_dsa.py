@@ -12,21 +12,29 @@ from repro.agents import (Hierarchical, KeepRecentK, make_env, run_episode,
                           scripted_agent)
 from repro.configs import get_smoke_config
 from repro.models import get_model
-from repro.serving import Request, ServingEngine
+from repro.serving import ContinuousEngine, Request
 
 
 def main():
     cfg = get_smoke_config("yi_6b")     # GQA + DSA retrofit
     model = get_model(cfg)
     params, _ = model.init(jax.random.key(0), cfg)
-    engine = ServingEngine(cfg, params, max_batch=4, max_len=256)
+    # continuous batching: paged KV cache + iteration-level scheduling;
+    # DSA sparse decode runs through the block-table gather
+    engine = ContinuousEngine(cfg, params, max_batch=2, block_size=16,
+                              num_blocks=32, max_len=256)
 
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(3, cfg.vocab_size, size=n).astype(
-        np.int32), max_new=8) for n in (16, 24, 32, 9)]
+        np.int32), max_new=m) for n, m in
+        ((16, 8), (24, 4), (32, 12), (9, 6))]
     engine.serve(reqs)
     for i, r in enumerate(reqs):
         print(f"req{i}: prompt_len={len(r.prompt)} -> {r.out.tolist()}")
+    s = engine.stats
+    print(f"scheduler: {s['decode_steps']} decode steps for "
+          f"{s['decode_tokens']} tokens across {s['prefills']} requests "
+          f"(admissions at steps {s['admit_steps']})")
 
     # context management on the synthetic multi-hop search env
     print("\ncontext management (hierarchical vs keep-recent, one episode):")

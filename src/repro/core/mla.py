@@ -83,19 +83,12 @@ def _wkv_b_split(params, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     return w[..., :m.qk_nope_dim], w[..., m.qk_nope_dim:]   # k-part, v-part
 
 
-def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
-                        c_cache: jax.Array, kr_cache: jax.Array,
-                        cache_index: jax.Array, positions: jax.Array
-                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Absorbed MQA-style decode over the latent cache.
+def _absorbed_q_and_latents(params, x: jax.Array, cfg: ModelConfig,
+                            positions: jax.Array):
+    """Projections shared by both absorbed-decode cache layouts.
 
-    x (B,1,D); c_cache (B,T,kv_lora); kr_cache (B,T,rope).
-    Returns (out (B,1,D), new c_cache, new kr_cache).
-
-    scores_h = (q_nope_h W^UK_h) · c  +  q_rope_h · k_rope      (576-dim dot
-    for GLM-5 — the decode-cost issue MLA-256 mitigates by cutting H by 1/3)
-    out_h    = (probs · c) W^UV_h
-    """
+    Returns (q_nope (B,S,H,nope), q_rope (B,S,H,rope), c_new (B,S,kv_lora),
+    kr_new (B,S,rope))."""
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads
@@ -109,11 +102,21 @@ def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
     c_new = rmsnorm(params, c_new, cfg.norm_eps, "kv_a_norm")
     kr_new = apply_rope(kr_new[:, :, None, :], positions,
                         cfg.rope_base)[:, :, 0, :]
-    c_cache = jax.lax.dynamic_update_slice_in_dim(
-        c_cache, c_new.astype(c_cache.dtype), cache_index, axis=1)
-    kr_cache = jax.lax.dynamic_update_slice_in_dim(
-        kr_cache, kr_new.astype(kr_cache.dtype), cache_index, axis=1)
+    return q_nope, q_rope, c_new, kr_new
 
+
+def _absorbed_attend(params, x: jax.Array, cfg: ModelConfig,
+                     q_nope: jax.Array, q_rope: jax.Array,
+                     c_cache: jax.Array, kr_cache: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Absorbed MQA attention over a (B,T,·) latent view -> (B,S,D).
+
+    scores_h = (q_nope_h W^UK_h) · c  +  q_rope_h · k_rope      (576-dim dot
+    for GLM-5 — the decode-cost issue MLA-256 mitigates by cutting H by 1/3)
+    out_h    = (probs · c) W^UV_h
+    """
+    m = cfg.mla
+    B, S = q_nope.shape[:2]
     wk, wv = _wkv_b_split(params, cfg)
     q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
                        wk.astype(jnp.float32))     # (B,S,H,kv_lora)
@@ -123,14 +126,63 @@ def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
                            kr_cache.astype(jnp.float32)))
     scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     scores = scores * scale
-    T = c_cache.shape[1]
-    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
-    mask = attention_mask(positions, kv_pos, causal=True,
-                          kv_len=cache_index + S)
     scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bsht,btl->bshl", probs,
                          c_cache.astype(jnp.float32))    # (B,S,H,kv_lora)
     out = jnp.einsum("bshl,lhv->bshv", out_lat, wv.astype(jnp.float32))
     out = out.astype(x.dtype).reshape(B, S, -1)
-    return out @ params["wo"], c_cache, kr_cache
+    return out @ params["wo"]
+
+
+def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
+                        c_cache: jax.Array, kr_cache: jax.Array,
+                        cache_index: jax.Array, positions: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed MQA-style decode over the contiguous latent cache.
+
+    x (B,1,D); c_cache (B,T,kv_lora); kr_cache (B,T,rope).
+    Returns (out (B,1,D), new c_cache, new kr_cache).
+    """
+    B, S, _ = x.shape
+    q_nope, q_rope, c_new, kr_new = _absorbed_q_and_latents(
+        params, x, cfg, positions)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), cache_index, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), cache_index, axis=1)
+    T = c_cache.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask = attention_mask(positions, kv_pos, causal=True,
+                          kv_len=cache_index + S)
+    out = _absorbed_attend(params, x, cfg, q_nope, q_rope, c_cache, kr_cache,
+                           mask)
+    return out, c_cache, kr_cache
+
+
+def mla_decode_paged(params, x: jax.Array, cfg: ModelConfig, *,
+                     c_pool: jax.Array, kr_pool: jax.Array,
+                     block_tables: jax.Array, positions: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed decode over a PAGED latent cache (block pool + table).
+
+    c_pool (nb,bs,kv_lora); kr_pool (nb,bs,rope); block_tables (B,mb);
+    positions (B,S) absolute positions of x's tokens.  New latents are
+    scattered through the table; attention runs over the gathered view,
+    whose index equals absolute position, so the causal mask alone masks
+    the unwritten tail of each sequence's last block.
+    """
+    from repro.core.paging import paged_update, paged_view
+    B, S, _ = x.shape
+    q_nope, q_rope, c_new, kr_new = _absorbed_q_and_latents(
+        params, x, cfg, positions)
+    c_pool = paged_update(c_pool, c_new, block_tables, positions)
+    kr_pool = paged_update(kr_pool, kr_new, block_tables, positions)
+    c_view = paged_view(c_pool, block_tables)       # (B, mb*bs, kv_lora)
+    kr_view = paged_view(kr_pool, block_tables)
+    T = c_view.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask = attention_mask(positions, kv_pos, causal=True)
+    out = _absorbed_attend(params, x, cfg, q_nope, q_rope, c_view, kr_view,
+                           mask)
+    return out, c_pool, kr_pool

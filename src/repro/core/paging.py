@@ -1,0 +1,60 @@
+"""Paged KV-cache primitives: block-pool scatter/gather through block tables.
+
+A *block pool* stores KV state for ALL in-flight sequences as a flat pool of
+fixed-size blocks: every pool leaf is shaped ``(num_blocks, block_size, *f)``
+(a model's ``init_paged_cache`` is literally its ``init_cache`` with the
+batch axis reinterpreted as the block axis).  A sequence addresses the pool
+through a *block table* — row b of a ``(B, max_blocks)`` int32 array lists
+the blocks owned by sequence b, in position order, so absolute token
+position ``p`` lives at ``(table[b, p // block_size], p % block_size)``.
+
+Two invariants the serving layer maintains make the device side trivial:
+
+* blocks are assigned in position order, so the *gathered view* of a
+  sequence (its blocks concatenated) has view index == absolute position —
+  the plain causal mask is sufficient, no extra kv_len bookkeeping;
+* idle batch slots point every table entry at a reserved trash block and
+  carry length 0, so their (discarded) writes never touch live state.
+
+Allocation policy (free lists, eviction) is host-side — see
+``repro.serving.paged.PagedKVCache``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``n_tokens`` positions (>= 1)."""
+    return max(1, -(-n_tokens // block_size))
+
+
+def paged_update(pool: jnp.ndarray, new: jnp.ndarray,
+                 block_tables: jnp.ndarray,
+                 positions: jnp.ndarray) -> jnp.ndarray:
+    """Scatter per-token state into the pool through the block table.
+
+    pool (nb, bs, *f); new (B, S, *f); block_tables (B, max_blocks) int32;
+    positions (B, S) absolute positions.  Distinct live sequences own
+    disjoint blocks, so writes never collide; idle slots all target the
+    trash block (last writer wins — the values are never read).
+    """
+    nb, bs = pool.shape[:2]
+    blk = jnp.take_along_axis(block_tables, positions // bs, axis=1)
+    flat_idx = (blk * bs + positions % bs).reshape(-1)
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    flat = flat.at[flat_idx].set(
+        new.reshape((-1,) + new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_view(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather each sequence's blocks into a contiguous per-sequence view.
+
+    pool (nb, bs, *f) + tables (B, max_blocks) -> (B, max_blocks*bs, *f),
+    where view index == absolute position (blocks are position-ordered).
+    """
+    B, mb = block_tables.shape
+    bs = pool.shape[1]
+    v = pool[block_tables]                       # (B, mb, bs, *f)
+    return v.reshape((B, mb * bs) + pool.shape[2:])

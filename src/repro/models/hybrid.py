@@ -51,14 +51,22 @@ def init(key, cfg: ModelConfig, dtype=jnp.float32,
 def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
            cache: Optional[dict] = None, cache_index=None, mesh=None,
            sparse: Optional[bool] = None, frontend_embeds=None,
-           positions=None) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+           positions=None, block_tables: Optional[jax.Array] = None
+           ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """``block_tables`` pages the shared-attention KV cache (the mamba2
+    recurrent states stay per-slot — they are O(1) per sequence already);
+    ``cache_index`` is then the per-sequence length vector (B,)."""
     if sparse is None:
         sparse = cfg.dsa is not None
     B, S = tokens.shape
     h = constrain_batch(embed(params["embed"], tokens, cfg), mesh)
     if positions is None:
-        start = cache_index if cache_index is not None else 0
-        positions = jnp.broadcast_to(jnp.arange(S) + start, (B, S))
+        start = jnp.asarray(cache_index if cache_index is not None else 0,
+                            jnp.int32)
+        if start.ndim == 1:          # per-sequence lengths (paged decode)
+            positions = start[:, None] + jnp.arange(S)[None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S) + start, (B, S))
     E = cfg.hybrid_attn_every
     G = _n_groups(cfg)
     lp = params["layers"]
@@ -81,7 +89,7 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
         h_carry, new_kv, _ = tfm.apply_block(
             params["shared_attn"], h_carry, cfg, positions, "global",
             moe=False, sparse=sparse, mesh=mesh, cache=g_kv,
-            cache_index=cache_index)
+            cache_index=cache_index, block_tables=block_tables)
         return h_carry, (new_ssm, new_kv)
 
     if cache is None:
@@ -154,18 +162,42 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"ssm": ssm, "kv": kv}, {"ssm": ssm_specs, "kv": kv_specs}
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32, abstract: bool = False, *,
+                     batch: int) -> Tuple[dict, dict]:
+    """Paged variant: the shared-attention KV becomes a block pool
+    (num_blocks, block_size, ...) while the mamba2 recurrent states remain
+    per-slot (``batch`` = number of scheduler slots) — a new sequence must
+    have its slot's ssm state reset on admission."""
+    from repro.utils import stack_tree
+    G = _n_groups(cfg)
+    ssm = _stacked_ssm_state(cfg, batch, dtype)
+    if abstract:
+        ssm = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           ssm)
+    kv_one = tfm._layer_cache(cfg, num_blocks, block_size, "global", dtype,
+                              abstract)
+    kv = stack_tree(kv_one, G, abstract)
+    return {"ssm": ssm, "kv": kv}, {}
+
+
 def prefill(params, tokens, cfg: ModelConfig, cache, *, sparse=None,
-            mesh=None, **kw):
+            mesh=None, block_tables=None, cache_index=None, **kw):
+    if cache_index is None:
+        cache_index = jnp.zeros((), jnp.int32)
     h, _, new_cache = hidden(params, tokens, cfg, cache=cache,
-                             cache_index=jnp.zeros((), jnp.int32),
-                             sparse=sparse, mesh=mesh)
+                             cache_index=cache_index,
+                             sparse=sparse, mesh=mesh,
+                             block_tables=block_tables)
+    if block_tables is not None:
+        return logits_from_hidden(params["embed"], h, cfg), new_cache
     lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
     return lg, new_cache
 
 
 def decode_step(params, token, cfg: ModelConfig, cache, cache_index,
-                *, sparse=None, mesh=None):
+                *, sparse=None, mesh=None, block_tables=None):
     h, _, new_cache = hidden(params, token, cfg, cache=cache,
                              cache_index=cache_index, sparse=sparse,
-                             mesh=mesh)
+                             mesh=mesh, block_tables=block_tables)
     return logits_from_hidden(params["embed"], h, cfg), new_cache

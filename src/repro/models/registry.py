@@ -8,6 +8,14 @@ Every module implements the same functional interface:
   init_cache(cfg, batch, max_len, dtype) -> (cache, logical_specs)
   prefill(params, tokens, cfg, cache, **kw) -> (last_logits, cache')
   decode_step(params, token, cfg, cache, cache_index, **kw) -> (logits, cache')
+
+Attention-cache families (transformer: dense/moe/vlm; hybrid) additionally
+support the PAGED cache layout used by the continuous-batching serving
+engine (repro.serving.scheduler):
+  init_paged_cache(cfg, num_blocks, block_size, dtype) -> (block pool, specs)
+  prefill/decode_step(..., block_tables=(B,max_blocks), cache_index=(B,))
+where the pool is addressed through per-sequence block tables
+(repro.core.paging) and cache_index carries per-sequence lengths.
 """
 from __future__ import annotations
 

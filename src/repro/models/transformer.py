@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.core import dsa as dsa_mod
 from repro.core import mla as mla_mod
 from repro.core import mtp as mtp_mod
+from repro.core.paging import paged_update, paged_view
 from repro.layers.attention import (attention_mask, build_gqa,
                                     dense_attention, gqa_qkv)
 from repro.layers.common import (build_embedding, build_mlp, build_rmsnorm,
@@ -59,10 +60,17 @@ def build_block(b: Builder, cfg: ModelConfig, kind: str, moe: bool):
 
 def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
             kind: str, *, sparse: bool, cache: Optional[dict],
-            cache_index: Optional[jax.Array], mesh=None
+            cache_index: Optional[jax.Array], mesh=None,
+            block_tables: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Attention sub-layer on normed hidden h.
-    Returns (out, new_cache, indexer aux loss)."""
+    Returns (out, new_cache, indexer aux loss).
+
+    With ``block_tables`` (B, max_blocks) the cache leaves are PAGED block
+    pools (num_blocks, block_size, ...): new tokens are scattered through
+    the table at ``positions`` and attention runs over the gathered
+    per-sequence view, whose index equals absolute position — so the plain
+    causal mask covers garbage beyond each sequence's length."""
     zero = jnp.zeros((), jnp.float32)
     B, S, D = h.shape
     window = cfg.sliding_window if kind == "local" else 0
@@ -82,14 +90,22 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
             return mla_mod.apply_mla(ap, h, cfg, positions=positions,
                                      mesh=mesh), None, zero
         # decode over latent cache (absorbed MQA path)
-        out, c_cache, kr_cache = mla_mod.mla_decode_absorbed(
-            ap, h, cfg, c_cache=cache["c"], kr_cache=cache["kr"],
-            cache_index=cache_index, positions=positions)
+        if block_tables is not None:
+            out, c_cache, kr_cache = mla_mod.mla_decode_paged(
+                ap, h, cfg, c_pool=cache["c"], kr_pool=cache["kr"],
+                block_tables=block_tables, positions=positions)
+        else:
+            out, c_cache, kr_cache = mla_mod.mla_decode_absorbed(
+                ap, h, cfg, c_cache=cache["c"], kr_cache=cache["kr"],
+                cache_index=cache_index, positions=positions)
         new_cache = dict(cache, c=c_cache, kr=kr_cache)
         if "k_idx" in cache:
             ki = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa) \
                 if "idx" in params else None
-            if ki is not None:
+            if ki is not None and block_tables is not None:
+                new_cache["k_idx"] = paged_update(
+                    cache["k_idx"], ki, block_tables, positions)
+            elif ki is not None:
                 new_cache["k_idx"] = jax.lax.dynamic_update_slice_in_dim(
                     cache["k_idx"], ki.astype(cache["k_idx"].dtype),
                     cache_index, axis=1)
@@ -103,6 +119,15 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
         kv_len = None
         k_full, v_full = k, v
         new_cache = None
+    elif block_tables is not None:
+        k_pool = paged_update(cache["k"], k, block_tables, positions)
+        v_pool = paged_update(cache["v"], v, block_tables, positions)
+        new_cache = dict(cache, k=k_pool, v=v_pool)
+        k_full = paged_view(k_pool, block_tables)
+        v_full = paged_view(v_pool, block_tables)
+        T = k_full.shape[1]
+        kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        kv_len = None            # view index == position: causal mask covers
     else:
         k_full = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
@@ -114,10 +139,15 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
         kv_len = cache_index + S
 
     if use_dsa:
+        ki_new = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
         if cache is None:
-            k_idx = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
+            k_idx = ki_new
+        elif block_tables is not None:
+            ki_pool = paged_update(cache["k_idx"], ki_new, block_tables,
+                                   positions)
+            new_cache["k_idx"] = ki_pool
+            k_idx = paged_view(ki_pool, block_tables)
         else:
-            ki_new = dsa_mod.indexer_keys(params["idx"], h, cfg.dsa)
             k_idx = jax.lax.dynamic_update_slice_in_dim(
                 cache["k_idx"], ki_new.astype(cache["k_idx"].dtype),
                 cache_index, axis=1)
@@ -149,14 +179,16 @@ def apply_block(params, h: jax.Array, cfg: ModelConfig,
                 positions: jax.Array, kind: str, moe: bool, *,
                 sparse: bool = False, mesh=None,
                 cache: Optional[dict] = None,
-                cache_index: Optional[jax.Array] = None
+                cache_index: Optional[jax.Array] = None,
+                block_tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     _cb = constrain_batch_seq if cfg.seq_parallel else constrain_batch
     h = _cb(h, mesh)
     a_in = rmsnorm(params, h, cfg.norm_eps, "attn_norm")
     a_out, new_cache, ind_kl = _attend(params, a_in, cfg, positions, kind,
                                        sparse=sparse, cache=cache,
-                                       cache_index=cache_index, mesh=mesh)
+                                       cache_index=cache_index, mesh=mesh,
+                                       block_tables=block_tables)
     h = h + _cb(a_out, mesh)
     m_in = rmsnorm(params, h, cfg.norm_eps, "mlp_norm")
     if moe:
@@ -203,7 +235,7 @@ def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
 # ---------------------------------------------------------------------------
 
 def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
-                 caches: Optional[dict], cache_index):
+                 caches: Optional[dict], cache_index, block_tables=None):
     """Scan over layer groups; caches is {'slotJ': stacked_cache} or None.
 
     Without caches (training) the scan body covers ``remat_group``
@@ -224,7 +256,8 @@ def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
             h, c_new, a = apply_block(group_params[j], h, cfg,
                                       positions=positions, kind=kind,
                                       moe=moe, sparse=sparse, mesh=mesh,
-                                      cache=c_j, cache_index=cache_index)
+                                      cache=c_j, cache_index=cache_index,
+                                      block_tables=block_tables)
             new_caches.append(c_new)
             aux = aux + a
         return h, aux, new_caches
@@ -277,9 +310,13 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
            positions: Optional[jax.Array] = None,
            sparse: Optional[bool] = None, mesh=None,
            cache: Optional[dict] = None,
-           cache_index: Optional[jax.Array] = None
+           cache_index: Optional[jax.Array] = None,
+           block_tables: Optional[jax.Array] = None
            ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
-    """Returns (final-normed hidden (B,S_total,D), aux loss, new cache)."""
+    """Returns (final-normed hidden (B,S_total,D), aux loss, new cache).
+
+    ``block_tables`` switches the cache to the paged block-pool layout;
+    ``cache_index`` is then the per-sequence length vector (B,)."""
     if sparse is None:
         sparse = cfg.dsa is not None
     B, S = tokens.shape
@@ -289,9 +326,13 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
     h = constrain_batch(h, mesh)
     S_total = h.shape[1]
     if positions is None:
-        start = cache_index if cache_index is not None else 0
-        positions = jnp.broadcast_to(jnp.arange(S_total) + start,
-                                     (B, S_total))
+        start = jnp.asarray(cache_index if cache_index is not None else 0,
+                            jnp.int32)
+        if start.ndim == 1:          # per-sequence lengths (paged decode)
+            positions = start[:, None] + jnp.arange(S_total)[None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S_total) + start,
+                                         (B, S_total))
     aux = jnp.zeros((), jnp.float32)
     new_cache: Optional[dict] = dict(cache) if cache is not None else None
     for i in range(cfg.first_k_dense):
@@ -299,7 +340,8 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
         h, c_new, a = apply_block(params[f"dense_{i}"], h, cfg, positions,
                                   "global", moe=False, sparse=sparse,
                                   mesh=mesh, cache=c_i,
-                                  cache_index=cache_index)
+                                  cache_index=cache_index,
+                                  block_tables=block_tables)
         aux = aux + a
         if new_cache is not None:
             new_cache[f"dense_{i}"] = c_new
@@ -307,7 +349,7 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
         params, h, cfg, positions, sparse=sparse, mesh=mesh,
         caches={k: v for k, v in cache.items() if k.startswith("slot")}
         if cache is not None else None,
-        cache_index=cache_index)
+        cache_index=cache_index, block_tables=block_tables)
     aux = aux + aux_s
     if new_cache is not None and scan_caches is not None:
         new_cache.update(scan_caches)
@@ -414,22 +456,50 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32,
     return cache, specs
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32, abstract: bool = False
+                     ) -> Tuple[dict, dict]:
+    """Block-pool KV cache for continuous batching (see repro.core.paging).
+
+    Identical pytree to ``init_cache`` with the batch axis reinterpreted as
+    the block axis and max_len as the block size: every leaf is
+    (layers?, num_blocks, block_size, ...).  Sequences address the pool via
+    (B, max_blocks) block tables passed to ``prefill``/``decode_step``."""
+    return init_cache(cfg, num_blocks, block_size, dtype, abstract)
+
+
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
             frontend_embeds: Optional[jax.Array] = None, sparse=None,
-            mesh=None) -> Tuple[jax.Array, dict]:
-    """Fill the cache with the prompt; returns (last-position logits, cache)."""
+            mesh=None, block_tables: Optional[jax.Array] = None,
+            cache_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, dict]:
+    """Fill the cache with the prompt; returns (last-position logits, cache).
+
+    Paged mode (``block_tables`` set) returns ALL-position logits (B,S,V):
+    right-padded prompts mean the caller must pick its own last real
+    position per sequence."""
+    if cache_index is None:
+        cache_index = jnp.zeros((), jnp.int32)
     h, _, new_cache = hidden(params, tokens, cfg,
                              frontend_embeds=frontend_embeds, sparse=sparse,
                              mesh=mesh, cache=cache,
-                             cache_index=jnp.zeros((), jnp.int32))
+                             cache_index=cache_index,
+                             block_tables=block_tables)
+    if block_tables is not None:
+        return logits_from_hidden(params["embed"], h, cfg), new_cache
     lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
     return lg, new_cache
 
 
 def decode_step(params, token: jax.Array, cfg: ModelConfig, cache: dict,
-                cache_index: jax.Array, *, sparse=None, mesh=None
+                cache_index: jax.Array, *, sparse=None, mesh=None,
+                block_tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, dict]:
-    """token (B,1) -> (logits (B,1,V), new cache).  One serve_step."""
+    """token (B,1) -> (logits (B,1,V), new cache).  One serve_step.
+
+    With ``block_tables``, ``cache`` is a block pool and ``cache_index`` the
+    per-sequence length vector (B,) — the continuous-batching layout."""
     h, _, new_cache = hidden(params, token, cfg, sparse=sparse, mesh=mesh,
-                             cache=cache, cache_index=cache_index)
+                             cache=cache, cache_index=cache_index,
+                             block_tables=block_tables)
     return logits_from_hidden(params["embed"], h, cfg), new_cache

@@ -1,10 +1,13 @@
-"""Batched serving engine: prefill + decode over the model registry.
+"""STATIC-batching serving engine: the reference oracle.
 
-Minimal but real: continuous batch of requests, KV cache per batch slot,
-greedy/temperature sampling, DSA sparse decode when the config carries it.
-Used by examples/serve_glm5_mini.py and the serving tests; the production
-layout (DP-attention + EP, PD disaggregation) is exercised by the dry-run
-and pd_sim respectively.
+Left-pads every prompt in a batch to the batch max and decodes lock-step
+until the LONGEST ``max_new`` finishes — the design the continuous-batching
+engine (``repro.serving.scheduler.ContinuousEngine``) replaces.  It is kept
+as (a) the numerically-simple oracle the scheduler's byte-identical greedy
+parity tests compare against, and (b) the baseline that
+``benchmarks/serving_throughput.py`` measures the paged engine's speedup
+over.  The production layout (DP-attention + EP, PD disaggregation) is
+exercised by the dry-run and pd_sim respectively.
 """
 from __future__ import annotations
 
@@ -25,6 +28,19 @@ class Request:
     max_new: int = 32
     temperature: float = 0.0
     out: Optional[np.ndarray] = None
+
+
+def sample_token(logits_row: np.ndarray, temperature: float, rng) -> int:
+    """Greedy argmax (temperature<=0) or softmax sampling for one request.
+
+    Shared by the static and continuous engines so greedy outputs are
+    byte-comparable between them.
+    """
+    if temperature <= 0:
+        return int(logits_row.argmax())
+    p = np.exp((logits_row - logits_row.max()) / temperature)
+    p /= p.sum()
+    return int(rng.choice(len(p), p=p))
 
 
 class ServingEngine:
@@ -73,10 +89,5 @@ class ServingEngine:
         lg = np.asarray(logits[:, -1], np.float32)
         out = np.zeros((len(batch), 1), np.int32)
         for i, r in enumerate(batch):
-            if r.temperature <= 0:
-                out[i, 0] = int(lg[i].argmax())
-            else:
-                p = np.exp((lg[i] - lg[i].max()) / r.temperature)
-                p /= p.sum()
-                out[i, 0] = int(self._rng.choice(len(p), p=p))
+            out[i, 0] = sample_token(lg[i], r.temperature, self._rng)
         return jnp.asarray(out)

@@ -1,0 +1,78 @@
+"""Host-side paged KV-cache bookkeeping: free-list block allocator.
+
+The device-side pool is built by each model's ``init_paged_cache`` (the
+``init_cache`` pytree with the batch axis reinterpreted as blocks) and is
+addressed through the scatter/gather primitives in ``repro.core.paging``.
+This module owns the allocation policy: a sequence is admitted with
+``blocks_for(prompt + max_new)`` blocks (so it can never run out
+mid-flight) and returns them to the free list the moment it finishes —
+which is what lets the scheduler admit a waiting request immediately
+instead of stalling until the whole static batch drains (vLLM-style
+continuous batching; the serving posture GLM-5 §3.6 assumes for agentic
+workloads).
+
+Invariants (tested in tests/test_paged_serving.py):
+  * every block is either free or allocated, never both (conservation);
+  * ``alloc`` never hands out a block twice before it is freed;
+  * ``free`` rejects double-frees and foreign blocks;
+  * ``alloc`` raises ``CacheFull`` rather than over-committing.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.paging import blocks_for  # noqa: F401  (re-export)
+
+
+class CacheFull(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class PagedKVCache:
+    """Free-list allocator over ``num_blocks`` blocks of ``block_size``."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks <= 0 or block_size <= 0:
+            raise ValueError("num_blocks and block_size must be positive")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # LIFO free list, seeded so pop() hands out low ids first (makes
+        # allocation order deterministic and easy to read in tests).
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._allocated)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` blocks off the free list; raises CacheFull if short."""
+        if n <= 0:
+            raise ValueError(f"alloc({n}): need a positive block count")
+        if n > len(self._free):
+            raise CacheFull(f"need {n} blocks, only {len(self._free)} free "
+                            f"(capacity {self.num_blocks})")
+        blocks = [self._free.pop() for _ in range(n)]
+        self._allocated.update(blocks)
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        """Return blocks to the free list; rejects double/foreign frees.
+
+        Atomic: validates the whole batch before mutating, so a rejected
+        free leaves the allocator state untouched."""
+        bad = [b for b in blocks if b not in self._allocated]
+        if bad:
+            raise ValueError(f"blocks {bad} are not currently allocated")
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in free(): {blocks}")
+        for b in blocks:
+            self._allocated.remove(b)
+            self._free.append(b)

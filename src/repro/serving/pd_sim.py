@@ -42,6 +42,13 @@ class ServingConfig:
     decode_tok_per_s: float = 100.0    # per stream
     accept_length: float = 1.0         # MTP speedup (tokens per step)
     dtype_speed: float = 1.0           # FP8 ~ 1.6x vs bf16=1.0
+    # continuous vs static batching on the decode servers.  Static batching
+    # decodes lock-step: a stream occupies its server until the LONGEST of
+    # ``decode_batch`` co-scheduled streams finishes (the padding waste the
+    # paged ContinuousEngine removes); continuous frees capacity the moment
+    # the stream's own tokens are done.
+    continuous_batching: bool = True
+    decode_batch: int = 8              # lock-step group size when static
 
 
 def simulate(w: Workload, s: ServingConfig, seed: int = 0) -> Dict[str, float]:
@@ -78,6 +85,15 @@ def simulate(w: Workload, s: ServingConfig, seed: int = 0) -> Dict[str, float]:
     decode_slowdown = 1.0 / max(0.05, 1.0 - rho) \
         if not s.pd_disaggregated else 1.0
 
+    # dedicated rng for hypothetical lock-step co-residents, so the SAME
+    # seed samples the SAME workload under both batching policies
+    peer_rng = np.random.default_rng(seed + 0x5EED)
+
+    def draw_ntok() -> int:
+        if peer_rng.random() < w.tail_frac:
+            return w.decode_tokens_tail
+        return max(1, int(peer_rng.exponential(w.decode_tokens_mean)))
+
     ideals = []
     for r in range(w.n_rollouts):
         t = 0.0
@@ -92,11 +108,19 @@ def simulate(w: Workload, s: ServingConfig, seed: int = 0) -> Dict[str, float]:
             pf_time = w.prefill_tokens_per_turn / prefill_rate
             prefill_free[pi] = start + pf_time
             t = start + pf_time
-            # decode occupies a server for the stream's duration
+            # decode: the stream finishes after its own tokens; the SERVER
+            # is held longer under static batching (lock-step with the
+            # longest of decode_batch co-resident streams).
             di = int(np.argmin(decode_free))
             start = max(t, decode_free[di])
             dec_time = ntok / decode_rate * decode_slowdown
-            decode_free[di] = start + dec_time
+            if s.continuous_batching:
+                occupy = dec_time
+            else:
+                group_max = max([ntok] + [draw_ntok()
+                                          for _ in range(s.decode_batch - 1)])
+                occupy = group_max / decode_rate * decode_slowdown
+            decode_free[di] = start + occupy
             t = start + dec_time
             ideal += pf_time + ntok / decode_rate
         finish_times.append(t)

@@ -1,0 +1,192 @@
+"""Continuous-batching scheduler over the paged KV cache (GLM-5 §3.6).
+
+Iteration-level scheduling: instead of padding a static batch and decoding
+lock-step until the longest request drains (``ServingEngine``), the engine
+keeps ``max_batch`` decode *slots* and, every step,
+
+  1. retires any sequence that has produced its ``max_new`` tokens,
+     returning its KV blocks to the free list immediately;
+  2. admits waiting requests into free slots — a request is admitted as
+     soon as a slot AND enough blocks for its whole lifetime
+     (``ceil((prompt + max_new) / block_size)``) are available, so it can
+     never run out of cache mid-flight;
+  3. runs ONE batched decode step for every active sequence, each at its
+     own position, through the block-table gather
+     (``models/*.decode_step(..., block_tables=...)``).
+
+Per-request ``max_new`` and ``temperature`` are honored individually; a
+mixed workload therefore never pays for the slowest member of its batch —
+the throughput gap ``benchmarks/serving_throughput.py`` measures.
+
+Device layout: one block pool (``init_paged_cache``) shared by all slots; a
+(max_batch, max_blocks) block table; a (max_batch,) length vector.  Idle
+slots point at a reserved trash block with length 0, so the decode step has
+a fixed shape (one compilation) regardless of occupancy.  Prompts are
+right-padded to a whole number of blocks, which buckets prefill
+compilations by ``block_size`` and keeps padded garbage behind the causal
+mask until real tokens overwrite it.
+"""
+from __future__ import annotations
+
+import collections
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import get_model
+from repro.serving.engine import Request, sample_token
+from repro.serving.paged import CacheFull, PagedKVCache, blocks_for
+
+
+class _Active:
+    """One in-flight sequence: its request, blocks, and the last sampled
+    (not yet decoded) token."""
+    __slots__ = ("req", "blocks", "out", "pending")
+
+    def __init__(self, req: Request, blocks: List[int], pending: int):
+        self.req = req
+        self.blocks = blocks
+        self.out: List[int] = []
+        self.pending = pending
+
+
+class ContinuousEngine:
+    """Paged-KV continuous-batching engine for attention-cache families."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 block_size: int = 16, num_blocks: int = 64,
+                 max_len: int = 512, seed: int = 0):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise NotImplementedError(
+                f"ContinuousEngine supports transformer families, got "
+                f"{cfg.family!r} (hybrid carries per-slot recurrent state; "
+                f"use the model-level paged API directly)")
+        self.cfg = cfg
+        self.params = params
+        self.model = get_model(cfg)
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.max_blocks = max(1, max_len // block_size)   # table width
+        self.kv = PagedKVCache(num_blocks, block_size)
+        self.trash = num_blocks          # reserved scratch block: idle slots
+        self.pool, _ = self.model.init_paged_cache(cfg, num_blocks + 1,
+                                                   block_size)
+        self.tables = np.full((max_batch, self.max_blocks), self.trash,
+                              np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.slots: List[Optional[_Active]] = [None] * max_batch
+        self.waiting: collections.deque = collections.deque()
+        self._rng = np.random.default_rng(seed)
+        self.stats = {"steps": 0, "prefills": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "admit_steps": []}
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn)
+
+    # ------------------------------------------------------------------ jit
+    def _decode_fn(self, params, tok, pool, tables, lengths):
+        return self.model.decode_step(params, tok, self.cfg, pool, lengths,
+                                      block_tables=tables)
+
+    def _prefill_fn(self, params, toks, pool, table):
+        return self.model.prefill(
+            params, toks, self.cfg, pool, block_tables=table,
+            cache_index=jnp.zeros((toks.shape[0],), jnp.int32))
+
+    # ------------------------------------------------------------ scheduler
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new
+        if need > self.max_blocks * self.block_size:
+            raise ValueError(
+                f"request needs {need} token slots > max_len "
+                f"{self.max_blocks * self.block_size}")
+        if blocks_for(need, self.block_size) > self.kv.num_blocks:
+            raise CacheFull(
+                f"request needs {blocks_for(need, self.block_size)} blocks "
+                f"> pool capacity {self.kv.num_blocks}")
+        self.waiting.append(req)
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.waiting or any(s is not None for s in self.slots):
+            self.step()
+        return requests
+
+    def step(self) -> None:
+        """One scheduler iteration: retire -> admit -> batched decode."""
+        self._retire()
+        self._admit()
+        self._decode_active()
+        self.stats["steps"] += 1
+
+    # ------------------------------------------------------------- phases
+    def _retire(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s is not None and len(s.out) + 1 >= s.req.max_new:
+                s.out.append(s.pending)     # final token needs no decode
+                self._finish(i)
+
+    def _finish(self, i: int) -> None:
+        s = self.slots[i]
+        s.req.out = np.asarray(s.out[:s.req.max_new], np.int32)
+        self.kv.free(s.blocks)              # blocks recycle immediately
+        self.slots[i] = None
+        self.tables[i] = self.trash
+        self.lengths[i] = 0
+
+    def _admit(self) -> None:
+        while self.waiting and None in self.slots:
+            req = self.waiting[0]
+            need = blocks_for(len(req.prompt) + req.max_new, self.block_size)
+            try:
+                blocks = self.kv.alloc(need)
+            except CacheFull:
+                if not any(s is not None for s in self.slots):
+                    raise   # empty engine and still no room: cannot ever fit
+                return      # wait for running sequences to free blocks
+            self.waiting.popleft()
+            slot = self.slots.index(None)
+            self._prefill_into(slot, req, blocks)
+            self.stats["prefills"] += 1
+            self.stats["admit_steps"].append(self.stats["steps"])
+
+    def _prefill_into(self, slot: int, req: Request,
+                      blocks: List[int]) -> None:
+        plen = len(req.prompt)
+        s_pad = blocks_for(plen, self.block_size) * self.block_size
+        toks = np.zeros((1, s_pad), np.int32)
+        toks[0, :plen] = req.prompt
+        row = np.full((1, self.max_blocks), self.trash, np.int32)
+        row[0, :len(blocks)] = blocks
+        logits, self.pool = self._prefill(self.params, jnp.asarray(toks),
+                                          self.pool, jnp.asarray(row))
+        first = sample_token(np.asarray(logits[0, plen - 1], np.float32),
+                             req.temperature, self._rng)
+        self.slots[slot] = _Active(req, blocks, first)
+        self.tables[slot] = row[0]
+        self.lengths[slot] = plen
+
+    def _decode_active(self) -> None:
+        # a slot whose pending token already completes the request skips
+        # decode and waits for _retire — its last token needs no forward
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and len(s.out) + 1 < s.req.max_new]
+        if not active:
+            return
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            tok[i, 0] = self.slots[i].pending
+        logits, self.pool = self._decode(
+            self.params, jnp.asarray(tok), self.pool,
+            jnp.asarray(self.tables), jnp.asarray(self.lengths))
+        lg = np.asarray(logits[:, 0], np.float32)
+        for i in active:
+            s = self.slots[i]
+            s.out.append(s.pending)
+            self.lengths[i] += 1            # pending now lives in the cache
+            s.pending = sample_token(lg[i], s.req.temperature, self._rng)
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(active)

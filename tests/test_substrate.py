@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config
@@ -23,13 +23,13 @@ from repro.sharding.rules import Builder, make_rules, resolve_spec
 # ---------------------------------------------------------------------------
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import auto_axis_types
+    return jax.make_mesh((1, 1), ("data", "model"), **auto_axis_types(2))
 
 
 def test_resolve_spec_divisibility_guard():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import auto_axis_types
+    mesh = jax.make_mesh((1,), ("model",), **auto_axis_types(1))
     rules = {"heads": "model"}
     # size-1 axes always divide; use a fake 16-way mesh via rules math
     spec = resolve_spec(("heads", None), (8, 4), rules, mesh)

@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test collect bench-serving dev-deps
+.PHONY: test collect bench-serving bench-smoke dev-deps
 
 test:
 	$(PY) -m pytest -q
@@ -12,6 +12,12 @@ collect:
 
 bench-serving:
 	$(PY) -m benchmarks.serving_throughput
+
+# CI-sized serving benchmarks: continuous batching + prefix cache on tiny
+# configs (fast mode).  Exercises the full benchmark harness path.
+bench-smoke:
+	$(PY) -m benchmarks.run --only serving_throughput --fast
+	$(PY) -m benchmarks.run --only prefix_cache --fast
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -19,6 +19,7 @@ SUITES = [
     ("rl_async", "S3.6/S4.1: async RL infra"),
     ("pd_disagg", "S3.6.2: PD disaggregation tail latency"),
     ("serving_throughput", "S3.6: continuous vs static batching tok/s"),
+    ("prefix_cache", "S3.6: radix prefix cache on agentic workloads"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 
@@ -45,6 +46,8 @@ def main() -> None:
                     kw["steps"] = 16
                 if "episodes" in sig.parameters:
                     kw["episodes"] = 8
+                if "fast" in sig.parameters:
+                    kw["fast"] = True
             rows = mod.run(**kw)
             for r in rows:
                 derived = str(r["derived"]).replace(",", ";")

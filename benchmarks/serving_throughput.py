@@ -62,9 +62,13 @@ def run(fast: bool = False, **kw):
         return time.time() - t0
 
     def time_continuous():
+        # prefix cache OFF: the warm-up pass serves the identical workload,
+        # so a warm radix cache would skip the timed run's prefills and
+        # inflate the batching speedup this suite is meant to isolate
+        # (prefix reuse is measured by benchmarks/prefix_cache.py)
         eng = ContinuousEngine(cfg, params, max_batch=max_batch,
                                block_size=16, num_blocks=64,
-                               max_len=max_len)
+                               max_len=max_len, prefix_cache=False)
         eng.serve(_clone(reqs))                  # warm-up: compile
         eng.stats = {k: [] if isinstance(v, list) else 0
                      for k, v in eng.stats.items()}   # count timed run only

@@ -9,11 +9,23 @@ training logprobs and the IcePop/double-sided-IS machinery has real work.
 Generation can proceed mid-trajectory across a weight push — fragments
 record the version that produced them (TITO metadata), feeding the
 staleness filter.
+
+Two generation paths:
+
+* ``generate`` — the original per-rollout loop (full-context re-forward
+  each token): simple, fragment-granular weight staleness, no KV cache.
+* ``generate_batch`` — the SERVING-ENGINE path: rollouts go through a
+  ``ContinuousEngine`` with the radix prefix cache, so a group that
+  shares a system prompt (the GRPO shape — N rollouts per task) prefills
+  it ONCE and every sequence decodes through the paged KV cache.
+  Per-token behavior logprobs come back on the request
+  (``capture_logprobs``) and are recorded through the same TITO gateway,
+  one fragment per rollout at the snapshot version the batch ran under.
 """
 from __future__ import annotations
 
 import threading
-from typing import Callable, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +50,14 @@ class RolloutEngine:
         # fixed-shape step: logits at position cur_len-1 of a padded buffer
         # (one compile for the whole run, not one per sequence length)
         self._step = jax.jit(self._logits_fn)
+        self._seed = seed
+        self._serving = None          # lazy ContinuousEngine (generate_batch)
+        self._serving_kw = None
+        self._serving_version = -1
+        # engine build + serve run under their OWN lock: generate_batch
+        # calls snapshot() (which takes self._lock), and serve() must not
+        # block weight pushes for the whole batch
+        self._serving_lock = threading.Lock()
 
     def _logits_fn(self, params, tokens, cur_len):
         logits = self.model.logits(params, tokens, self.cfg)
@@ -96,6 +116,60 @@ class RolloutEngine:
             self.gateway.record(rollout_id, np.array(frag_toks),
                                 np.array(frag_lps), version)
         return np.asarray(out, np.int32)
+
+    # ------------------------------------------------------- engine-backed
+    def serving_engine(self, *, max_batch: int = 8, block_size: int = 16,
+                       num_blocks: int = 256, max_len: int = 512):
+        """The paged continuous-batching engine this rollout worker decodes
+        through (built lazily, reused across batches — its radix prefix
+        cache persists, so a system prompt shared across GRPO groups stays
+        resident between calls)."""
+        kw = dict(max_batch=max_batch, block_size=block_size,
+                  num_blocks=num_blocks, max_len=max_len)
+        with self._serving_lock:
+            if self._serving is None:
+                from repro.serving.scheduler import ContinuousEngine
+                with self._lock:
+                    params = self._params
+                # seed follows the worker so DP ranks sample distinct
+                # streams, exactly like the generate() path
+                self._serving = ContinuousEngine(
+                    self.cfg, params, capture_logprobs=True,
+                    seed=self._seed, **kw)
+                self._serving_kw = kw
+            elif kw != self._serving_kw:
+                raise ValueError(
+                    f"serving engine already built with {self._serving_kw},"
+                    f" got {kw}: engine geometry is fixed per worker")
+            return self._serving
+
+    def generate_batch(self, rollout_ids: Sequence[str],
+                       prompts: Sequence[np.ndarray], max_new: int, *,
+                       temperature: float = 1.0,
+                       **engine_kw) -> List[np.ndarray]:
+        """Serve a batch of rollouts through the prefix-cached engine.
+
+        Rollouts sharing a prompt prefix (system prompt, few-shot header)
+        prefill it once; see ``benchmarks/prefix_cache.py``.  The whole
+        batch runs at ONE weight snapshot — staleness granularity is the
+        batch, not the fragment (the trade the paged KV cache buys)."""
+        from repro.serving.engine import Request
+        eng = self.serving_engine(**engine_kw)
+        reqs = [Request(prompt=np.asarray(p, np.int32), max_new=max_new,
+                        temperature=temperature) for p in prompts]
+        with self._serving_lock:         # one serve loop per engine at a time
+            params, version = self.snapshot()
+            eng.params = params          # same pytree structure: no retrace
+            if version != self._serving_version:
+                # cached KV was computed under OLDER weights: aliasing it
+                # into a v_new forward would mix versions inside one
+                # trajectory while the fragment is stamped with one version
+                eng.reset_cache()
+                self._serving_version = version
+            eng.serve(reqs)
+        for rid, r in zip(rollout_ids, reqs):
+            self.gateway.record(rid, r.out, r.out_logprobs, version)
+        return [r.out for r in reqs]
 
 
 def _logsumexp(x: np.ndarray) -> float:

@@ -28,6 +28,9 @@ class Request:
     max_new: int = 32
     temperature: float = 0.0
     out: Optional[np.ndarray] = None
+    # per-token behavior logprobs of ``out`` (filled by ContinuousEngine
+    # when capture_logprobs=True — the TITO contract for RL rollouts)
+    out_logprobs: Optional[np.ndarray] = None
 
 
 def sample_token(logits_row: np.ndarray, temperature: float, rng) -> int:
@@ -69,7 +72,9 @@ class ServingEngine:
         toks = np.zeros((B, plen), np.int32)
         for i, r in enumerate(batch):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        cache, _ = self.model.init_cache(self.cfg, B, self.max_len)
+        cache, _ = self.model.init_cache(
+            self.cfg, B, self.max_len,
+            jax.tree.leaves(self.params)[0].dtype)
         logits, cache = self.model.prefill(self.params,
                                            jnp.asarray(toks), self.cfg,
                                            cache)

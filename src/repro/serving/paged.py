@@ -1,25 +1,42 @@
-"""Host-side paged KV-cache bookkeeping: free-list block allocator.
+"""Host-side paged KV-cache bookkeeping: refcounted free-list allocator.
 
 The device-side pool is built by each model's ``init_paged_cache`` (the
 ``init_cache`` pytree with the batch axis reinterpreted as blocks) and is
 addressed through the scatter/gather primitives in ``repro.core.paging``.
 This module owns the allocation policy: a sequence is admitted with
 ``blocks_for(prompt + max_new)`` blocks (so it can never run out
-mid-flight) and returns them to the free list the moment it finishes —
-which is what lets the scheduler admit a waiting request immediately
-instead of stalling until the whole static batch drains (vLLM-style
-continuous batching; the serving posture GLM-5 §3.6 assumes for agentic
-workloads).
+mid-flight) and returns them the moment it finishes — which is what lets
+the scheduler admit a waiting request immediately instead of stalling
+until the whole static batch drains (vLLM-style continuous batching; the
+serving posture GLM-5 §3.6 assumes for agentic workloads).
 
-Invariants (tested in tests/test_paged_serving.py):
-  * every block is either free or allocated, never both (conservation);
-  * ``alloc`` never hands out a block twice before it is freed;
-  * ``free`` rejects double-frees and foreign blocks;
+Blocks are REFCOUNTED so the prefix cache (``repro.serving.prefix_cache``)
+can alias one physical block into many sequences' block tables: ``alloc``
+hands out blocks at refcount 1, ``retain`` adds a reference (a new reader
+of a shared prefix), ``release`` drops one and only returns the block to
+the free list when the count reaches zero.  ``free`` is the strict
+variant — it requires exclusive ownership (refcount 1) and exists for the
+cache-off path where sharing would be a bug.  A shared block must never
+be written; a sequence that needs to diverge inside one copies it first
+(copy-on-write — the device copy lives in the engine, the ownership swap
+here).
+
+When the free list runs dry ``alloc`` asks an optional ``evictor`` (the
+prefix cache's LRU) to release cached, unreferenced blocks before giving
+up with ``CacheFull``.
+
+Invariants (tested in tests/test_paged_serving.py + test_prefix_cache.py):
+  * every block is either free or allocated, never both (conservation:
+    ``free_blocks + used_blocks == num_blocks`` at all times);
+  * ``alloc`` never hands out a block twice before its refcount hits 0;
+  * ``release`` rejects blocks that are not allocated (double-release of
+    an exclusively-held block frees it once, then errors);
+  * ``free`` rejects double-frees, foreign blocks, and shared blocks;
   * ``alloc`` raises ``CacheFull`` rather than over-committing.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Callable, Dict, List, Optional
 
 from repro.core.paging import blocks_for  # noqa: F401  (re-export)
 
@@ -29,7 +46,7 @@ class CacheFull(RuntimeError):
 
 
 class PagedKVCache:
-    """Free-list allocator over ``num_blocks`` blocks of ``block_size``."""
+    """Refcounted free-list allocator over ``num_blocks`` blocks."""
 
     def __init__(self, num_blocks: int, block_size: int):
         if num_blocks <= 0 or block_size <= 0:
@@ -39,7 +56,10 @@ class PagedKVCache:
         # LIFO free list, seeded so pop() hands out low ids first (makes
         # allocation order deterministic and easy to read in tests).
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
-        self._allocated = set()
+        self._ref: Dict[int, int] = {}
+        # Called with the shortfall when alloc cannot be satisfied; should
+        # release() cached blocks and return how many it let go.
+        self.evictor: Optional[Callable[[int], int]] = None
 
     @property
     def free_blocks(self) -> int:
@@ -47,32 +67,73 @@ class PagedKVCache:
 
     @property
     def used_blocks(self) -> int:
-        return len(self._allocated)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        """Current reference count (0 for free/unknown blocks)."""
+        return self._ref.get(block, 0)
 
     def blocks_for(self, n_tokens: int) -> int:
         return blocks_for(n_tokens, self.block_size)
 
+    # ------------------------------------------------------------ lifetime
     def alloc(self, n: int) -> List[int]:
-        """Pop ``n`` blocks off the free list; raises CacheFull if short."""
+        """Pop ``n`` blocks off the free list at refcount 1.
+
+        Asks the evictor (if registered) to release cached blocks first;
+        raises CacheFull if still short."""
         if n <= 0:
             raise ValueError(f"alloc({n}): need a positive block count")
+        if n > len(self._free) and self.evictor is not None:
+            self.evictor(n - len(self._free))
         if n > len(self._free):
             raise CacheFull(f"need {n} blocks, only {len(self._free)} free "
                             f"(capacity {self.num_blocks})")
         blocks = [self._free.pop() for _ in range(n)]
-        self._allocated.update(blocks)
+        for b in blocks:
+            self._ref[b] = 1
         return blocks
 
-    def free(self, blocks: List[int]) -> None:
-        """Return blocks to the free list; rejects double/foreign frees.
+    def retain(self, blocks: List[int]) -> None:
+        """Add one reference to each block (aliasing a shared prefix).
 
-        Atomic: validates the whole batch before mutating, so a rejected
-        free leaves the allocator state untouched."""
-        bad = [b for b in blocks if b not in self._allocated]
+        Atomic: validates the whole batch before mutating."""
+        bad = [b for b in blocks if b not in self._ref]
+        if bad:
+            raise ValueError(f"retain: blocks {bad} are not allocated")
+        for b in blocks:
+            self._ref[b] += 1
+
+    def release(self, blocks: List[int]) -> None:
+        """Drop one reference per block; frees those that reach zero.
+
+        Atomic: validates the whole batch before mutating.  A block may
+        appear at most once per call (a sequence owns each block once)."""
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in release(): {blocks}")
+        bad = [b for b in blocks if b not in self._ref]
+        if bad:
+            raise ValueError(f"release: blocks {bad} are not allocated")
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
+
+    def free(self, blocks: List[int]) -> None:
+        """Strict release: every block must be exclusively held (ref 1).
+
+        The cache-off path uses this so an accidental alias (a bug there)
+        fails loudly instead of silently dropping a reader's data."""
+        bad = [b for b in blocks if b not in self._ref]
         if bad:
             raise ValueError(f"blocks {bad} are not currently allocated")
         if len(set(blocks)) != len(blocks):
             raise ValueError(f"duplicate blocks in free(): {blocks}")
+        shared = [b for b in blocks if self._ref[b] != 1]
+        if shared:
+            raise ValueError(f"blocks {shared} are shared (refcount > 1); "
+                             f"use release()")
         for b in blocks:
-            self._allocated.remove(b)
+            del self._ref[b]
             self._free.append(b)

@@ -1,0 +1,216 @@
+"""Radix prefix cache: token-block trie over the refcounted paged KV pool.
+
+GLM-5's serving posture (§3.6) feeds agentic traffic whose prompts are
+massively redundant: thousands of rollouts share one system prompt, and a
+multi-turn session re-submits its whole conversation every turn.  The KV
+state for a token prefix depends only on the tokens (positions are
+absolute, blocks are position-ordered), so already-computed blocks can be
+aliased into any new sequence whose prompt starts with the same tokens —
+re-prefilling them is pure waste (the quadratic-cost dynamic
+``agents/search_env.py`` models).
+
+Structure: a trie whose edges are BLOCKS of tokens.  A node owns one
+physical KV block holding ``length`` tokens; internal nodes are always
+full (``length == block_size``), a leaf may be partial (the tail of a
+retired sequence).  The cache holds ONE reference on every node's block;
+readers add their own via ``PagedKVCache.retain``.
+
+* ``match(tokens)`` walks full-block edges greedily, then takes the best
+  partial overlap with any child (a shared prefix that diverges
+  mid-block).  Matched blocks are retained for the caller.  A caller that
+  matched into the middle of a block must copy-on-write fork it before
+  writing (the engine owns the device copy); the cached copy is never
+  mutated.
+* ``insert(tokens, blocks)`` is called on retire: the sequence's blocks
+  are adopted into the trie (ownership transfer) or, where an identical
+  node already exists, the caller's reference is dropped — so concurrent
+  retires of the same prefix deduplicate to one physical copy.
+* ``evict(n)`` frees least-recently-used UNREFERENCED leaves (refcount 1
+  == only the cache holds them); parents become evictable once their
+  children go, so a cold chain unwinds tail-first and the prefix
+  property (every cached block's ancestors are cached) is preserved.
+  Registered as ``kv.evictor`` so allocation pressure reclaims cache
+  space automatically instead of raising ``CacheFull``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.paged import PagedKVCache
+
+
+class _Node:
+    __slots__ = ("key", "block", "length", "parent", "children", "stamp")
+
+    def __init__(self, key: Tuple[int, ...], block: Optional[int],
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.block = block
+        self.length = len(key)
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.stamp = 0
+
+
+def _common_prefix(a: Tuple[int, ...], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class PrefixCache:
+    """Block-granular radix tree mapping token prefixes to KV blocks."""
+
+    def __init__(self, kv: PagedKVCache):
+        self.kv = kv
+        self.block_size = kv.block_size
+        self.root = _Node((), None, None)
+        self._tick = 0
+        self.stats = {"hits": 0, "misses": 0, "matched_tokens": 0,
+                      "evictions": 0, "inserted_blocks": 0,
+                      "deduped_blocks": 0}
+        kv.evictor = self.evict
+
+    # ------------------------------------------------------------- queries
+    @property
+    def cached_blocks(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    def _iter_nodes(self):
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.stamp = self._tick
+
+    # --------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int], *,
+              limit: Optional[int] = None) -> Tuple[int, List[int]]:
+        """Longest cached prefix of ``tokens[:limit]``.
+
+        Returns ``(m, blocks)``: ``m`` matched tokens whose KV lives in
+        ``blocks`` (position order, ``ceil(m / block_size)`` of them), each
+        retained on behalf of the caller.  If ``m % block_size != 0`` the
+        final block is only partially matched and MUST be copy-on-write
+        forked (and its reference released) before the caller writes into
+        that position range."""
+        bs = self.block_size
+        L = len(tokens) if limit is None else min(limit, len(tokens))
+        node, m = self.root, 0
+        blocks: List[int] = []
+        while m + bs <= L:
+            child = node.children.get(tuple(int(t) for t in tokens[m:m + bs]))
+            if child is None:
+                break
+            node = child
+            blocks.append(node.block)
+            m += bs
+            self._touch(node)
+        # best partial overlap with any child (full or partial): a reader
+        # diverging mid-block forks the copy, so any overlap >= 1 saves work
+        best, best_k = None, 0
+        rest = [int(t) for t in tokens[m:L]]
+        if rest:
+            for key, child in node.children.items():
+                k = _common_prefix(key, rest)
+                if k > best_k:
+                    best, best_k = child, k
+        if best is not None:
+            blocks.append(best.block)
+            m += best_k
+            self._touch(best)
+        if blocks:
+            self.kv.retain(blocks)
+            self.stats["hits"] += 1
+        else:
+            self.stats["misses"] += 1
+        self.stats["matched_tokens"] += m
+        return m, blocks
+
+    # -------------------------------------------------------------- insert
+    def insert(self, tokens: Sequence[int], blocks: List[int]) -> None:
+        """Adopt a retired sequence's blocks into the trie.
+
+        ``blocks`` must cover exactly ``ceil(len(tokens) / block_size)``
+        blocks, position-ordered, with one reference each held by the
+        caller.  Ownership transfers: where a path node is created the
+        caller's reference becomes the cache's; where an identical node
+        exists the duplicate block is released."""
+        bs = self.block_size
+        toks = [int(t) for t in tokens]
+        need = -(-len(toks) // bs) if toks else 0
+        if len(blocks) != need:
+            raise ValueError(f"insert: {len(toks)} tokens need {need} "
+                             f"blocks, got {len(blocks)}")
+        node, i, bi = self.root, 0, 0
+        while i + bs <= len(toks):
+            key = tuple(toks[i:i + bs])
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, blocks[bi], node)
+                node.children[key] = child
+                self.stats["inserted_blocks"] += 1
+            else:
+                self.kv.release([blocks[bi]])       # duplicate content
+                self.stats["deduped_blocks"] += 1
+            node = child
+            self._touch(node)
+            i += bs
+            bi += 1
+        rem = tuple(toks[i:])
+        if rem:
+            if rem in node.children:
+                self.kv.release([blocks[bi]])
+                self.stats["deduped_blocks"] += 1
+                self._touch(node.children[rem])
+            else:
+                child = _Node(rem, blocks[bi], node)
+                node.children[rem] = child
+                self.stats["inserted_blocks"] += 1
+                self._touch(child)
+
+    # ------------------------------------------------------------ eviction
+    def _evictable(self, node: _Node) -> bool:
+        return (node.parent is not None
+                and node.parent.children.get(node.key) is node
+                and not node.children
+                and self.kv.refcount(node.block) == 1)
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` blocks, LRU leaves first; returns count freed.
+
+        A leaf is evictable only when no sequence references its block;
+        removing it may expose its parent as the next candidate, so a cold
+        chain unwinds from the tail without ever orphaning a descendant.
+        One trie walk seeds a min-heap of leaves; parents are pushed as
+        their last child goes, so evicting k of N cached blocks is
+        O((N + k) log N), not O(k·N)."""
+        import heapq
+        heap = [(nd.stamp, id(nd), nd) for nd in self._iter_nodes()
+                if self._evictable(nd)]
+        heapq.heapify(heap)
+        freed = 0
+        while freed < n and heap:
+            _, _, victim = heapq.heappop(heap)
+            if not self._evictable(victim):     # stale entry: state moved on
+                continue
+            parent = victim.parent
+            del parent.children[victim.key]
+            self.kv.release([victim.block])
+            freed += 1
+            self.stats["evictions"] += 1
+            if parent is not self.root and self._evictable(parent):
+                heapq.heappush(heap, (parent.stamp, id(parent), parent))
+        return freed
+
+    def clear(self) -> None:
+        """Drop every cached block (e.g. between benchmark runs)."""
+        for node in list(self._iter_nodes()):
+            self.kv.release([node.block])
+        self.root.children.clear()

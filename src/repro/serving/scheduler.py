@@ -5,24 +5,43 @@ lock-step until the longest request drains (``ServingEngine``), the engine
 keeps ``max_batch`` decode *slots* and, every step,
 
   1. retires any sequence that has produced its ``max_new`` tokens,
-     returning its KV blocks to the free list immediately;
+     handing its KV blocks to the prefix cache (or straight back to the
+     free list when the cache is off);
   2. admits waiting requests into free slots — a request is admitted as
      soon as a slot AND enough blocks for its whole lifetime
      (``ceil((prompt + max_new) / block_size)``) are available, so it can
      never run out of cache mid-flight;
-  3. runs ONE batched decode step for every active sequence, each at its
-     own position, through the block-table gather
+  3. advances chunked prefills (one block-aligned chunk per slot per
+     step), so one huge prompt cannot stall the decode batch
+     (the §3.6.2 prefill/decode interference, engine-side);
+  4. runs ONE batched decode step for every decoding sequence, each at
+     its own position, through the block-table gather
      (``models/*.decode_step(..., block_tables=...)``).
 
-Per-request ``max_new`` and ``temperature`` are honored individually; a
-mixed workload therefore never pays for the slowest member of its batch —
-the throughput gap ``benchmarks/serving_throughput.py`` measures.
+Prefix reuse (``prefix_cache=True``, attention-cache families): on admit
+the engine asks the radix cache (``repro.serving.prefix_cache``) for the
+longest cached prefix of the prompt, aliases those blocks into the
+sequence's block table (read-only, refcounted), copy-on-write forks the
+final block when the match ends mid-block, and prefills ONLY the suffix —
+``prefill`` takes a per-sequence start offset, so suffix queries attend
+over the aliased prefix KV through the same gathered view.  On retire the
+sequence's blocks are inserted into the radix tree instead of freed;
+identical content deduplicates, and LRU eviction reclaims cold cached
+blocks under allocation pressure.  Greedy outputs are byte-identical with
+the cache on or off (tests/test_prefix_cache.py).
+
+The hybrid family (mamba2 + shared attention) pages its shared-attention
+KV like everyone else but carries per-slot recurrent state: admission
+zeroes the slot's mamba2 state, chunked prefill threads it through the
+slot, and decode steps restore it for slots still prefilling.  Recurrent
+state cannot be recovered from KV blocks, so the prefix cache is
+force-disabled for hybrid.
 
 Device layout: one block pool (``init_paged_cache``) shared by all slots; a
 (max_batch, max_blocks) block table; a (max_batch,) length vector.  Idle
 slots point at a reserved trash block with length 0, so the decode step has
-a fixed shape (one compilation) regardless of occupancy.  Prompts are
-right-padded to a whole number of blocks, which buckets prefill
+a fixed shape (one compilation) regardless of occupancy.  Prompt suffixes
+are right-padded to a whole number of blocks, which buckets prefill
 compilations by ``block_size`` and keeps padded garbage behind the causal
 mask until real tokens overwrite it.
 """
@@ -39,31 +58,44 @@ from repro.configs.base import ModelConfig
 from repro.models import get_model
 from repro.serving.engine import Request, sample_token
 from repro.serving.paged import CacheFull, PagedKVCache, blocks_for
+from repro.serving.prefix_cache import PrefixCache
 
 
 class _Active:
-    """One in-flight sequence: its request, blocks, and the last sampled
-    (not yet decoded) token."""
-    __slots__ = ("req", "blocks", "out", "pending")
+    """One in-flight sequence: its request, blocks, sampling state, and —
+    while its prompt is still being chunk-prefilled — the prefill cursor."""
+    __slots__ = ("req", "blocks", "out", "lps", "pending", "pending_lp",
+                 "row", "pos")
 
-    def __init__(self, req: Request, blocks: List[int], pending: int):
+    def __init__(self, req: Request, blocks: List[int], row: np.ndarray,
+                 pos: int):
         self.req = req
         self.blocks = blocks
         self.out: List[int] = []
-        self.pending = pending
+        self.lps: List[float] = []
+        self.pending: Optional[int] = None   # None: prompt not fully prefilled
+        self.pending_lp = 0.0
+        self.row = row                       # full block-table row
+        self.pos = pos                       # next prefill position
 
 
 class ContinuousEngine:
-    """Paged-KV continuous-batching engine for attention-cache families."""
+    """Paged-KV continuous-batching engine with radix prefix reuse."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  block_size: int = 16, num_blocks: int = 64,
-                 max_len: int = 512, seed: int = 0):
-        if cfg.family not in ("dense", "moe", "vlm"):
+                 max_len: int = 512, seed: int = 0,
+                 prefix_cache: bool = True,
+                 prefill_chunk: Optional[int] = None,
+                 capture_logprobs: bool = False):
+        if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
-                f"ContinuousEngine supports transformer families, got "
-                f"{cfg.family!r} (hybrid carries per-slot recurrent state; "
-                f"use the model-level paged API directly)")
+                f"ContinuousEngine supports transformer + hybrid families, "
+                f"got {cfg.family!r}")
+        if prefill_chunk is not None and (
+                prefill_chunk <= 0 or prefill_chunk % block_size):
+            raise ValueError("prefill_chunk must be a positive multiple of "
+                             f"block_size, got {prefill_chunk}")
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
@@ -71,9 +103,22 @@ class ContinuousEngine:
         self.block_size = block_size
         self.max_blocks = max(1, max_len // block_size)   # table width
         self.kv = PagedKVCache(num_blocks, block_size)
+        self.prefill_chunk = prefill_chunk
+        self.capture_logprobs = capture_logprobs
+        self.hybrid = cfg.family == "hybrid"
+        # recurrent state is not reconstructible from KV blocks: no reuse
+        self.prefix = PrefixCache(self.kv) \
+            if (prefix_cache and not self.hybrid) else None
         self.trash = num_blocks          # reserved scratch block: idle slots
-        self.pool, _ = self.model.init_paged_cache(cfg, num_blocks + 1,
-                                                   block_size)
+        # pool dtype follows the params (e.g. the bf16 rollout regime) so
+        # cached KV never silently promotes the residual stream
+        dtype = jax.tree.leaves(params)[0].dtype
+        if self.hybrid:
+            self.pool, _ = self.model.init_paged_cache(
+                cfg, num_blocks + 1, block_size, dtype, batch=max_batch)
+        else:
+            self.pool, _ = self.model.init_paged_cache(cfg, num_blocks + 1,
+                                                       block_size, dtype)
         self.tables = np.full((max_batch, self.max_blocks), self.trash,
                               np.int32)
         self.lengths = np.zeros((max_batch,), np.int32)
@@ -81,19 +126,65 @@ class ContinuousEngine:
         self.waiting: collections.deque = collections.deque()
         self._rng = np.random.default_rng(seed)
         self.stats = {"steps": 0, "prefills": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "admit_steps": []}
+                      "decode_tokens": 0, "admit_steps": [],
+                      "prefill_tokens": 0, "cached_tokens": 0,
+                      "cow_forks": 0, "chunk_steps": 0}
         self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn)
+        self._prefill = jax.jit(self._hybrid_prefill_fn if self.hybrid
+                                else self._prefill_fn)
+        self._cow = jax.jit(self._cow_fn)
+        if self.hybrid:
+            self._ssm_reset = jax.jit(self._ssm_reset_fn)
+            self._ssm_restore = jax.jit(self._ssm_restore_fn)
 
     # ------------------------------------------------------------------ jit
     def _decode_fn(self, params, tok, pool, tables, lengths):
         return self.model.decode_step(params, tok, self.cfg, pool, lengths,
                                       block_tables=tables)
 
-    def _prefill_fn(self, params, toks, pool, table):
-        return self.model.prefill(
-            params, toks, self.cfg, pool, block_tables=table,
-            cache_index=jnp.zeros((toks.shape[0],), jnp.int32))
+    def _prefill_fn(self, params, toks, pool, table, starts):
+        return self.model.prefill(params, toks, self.cfg, pool,
+                                  block_tables=table, cache_index=starts)
+
+    def _hybrid_prefill_fn(self, params, toks, pool, table, starts, slot):
+        # thread ONE slot's recurrent state through the batch-1 prefill;
+        # the shared-attention KV pool is global, the ssm state per-slot
+        ssm_i = jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
+            pool["ssm"])
+        logits, new = self.model.prefill(
+            params, toks, self.cfg, {"ssm": ssm_i, "kv": pool["kv"]},
+            block_tables=table, cache_index=starts)
+        ssm = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one, slot, axis=1),
+            pool["ssm"], new["ssm"])
+        return logits, {"ssm": ssm, "kv": new["kv"]}
+
+    def _cow_fn(self, pool, src, dst):
+        """Copy block ``src`` -> ``dst`` across every KV leaf (COW fork)."""
+        out = {}
+        for k, v in pool.items():
+            if k == "ssm":
+                out[k] = v                       # recurrent state: per-slot
+            elif k == "kv" or k.startswith("slot"):
+                out[k] = jax.tree.map(            # (layers, nb, bs, ...)
+                    lambda x: x.at[:, dst].set(x[:, src]), v)
+            else:
+                out[k] = jax.tree.map(            # dense_*: (nb, bs, ...)
+                    lambda x: x.at[dst].set(x[src]), v)
+        return out
+
+    def _ssm_reset_fn(self, pool, slot):
+        return dict(pool, ssm=jax.tree.map(
+            lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])),
+            pool["ssm"]))
+
+    def _ssm_restore_fn(self, pool, old_ssm, mask):
+        def mix(new, old):
+            m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, old, new)
+        return dict(pool, ssm=jax.tree.map(mix, pool["ssm"], old_ssm))
 
     # ------------------------------------------------------------ scheduler
     def submit(self, req: Request) -> None:
@@ -116,77 +207,214 @@ class ContinuousEngine:
         return requests
 
     def step(self) -> None:
-        """One scheduler iteration: retire -> admit -> batched decode."""
+        """One iteration: retire -> admit -> chunk prefill -> batched
+        decode."""
         self._retire()
         self._admit()
+        self._prefill_chunks()
         self._decode_active()
         self.stats["steps"] += 1
 
-    # ------------------------------------------------------------- phases
+    def reset_cache(self) -> None:
+        """Drop all cached prefix blocks (benchmark hygiene)."""
+        if self.prefix is not None:
+            self.prefix.clear()
+
+    @property
+    def cached_blocks(self) -> int:
+        return self.prefix.cached_blocks if self.prefix is not None else 0
+
+    # --------------------------------------------------------------- retire
     def _retire(self) -> None:
         for i, s in enumerate(self.slots):
-            if s is not None and len(s.out) + 1 >= s.req.max_new:
+            if s is not None and s.pending is not None \
+                    and len(s.out) + 1 >= s.req.max_new:
                 s.out.append(s.pending)     # final token needs no decode
+                s.lps.append(s.pending_lp)
                 self._finish(i)
 
     def _finish(self, i: int) -> None:
         s = self.slots[i]
         s.req.out = np.asarray(s.out[:s.req.max_new], np.int32)
-        self.kv.free(s.blocks)              # blocks recycle immediately
+        if self.capture_logprobs:
+            s.req.out_logprobs = np.asarray(s.lps[:s.req.max_new],
+                                            np.float32)
+        if self.prefix is not None:
+            # KV exists for every position actually written: the prompt
+            # plus all DECODED output tokens (the final sampled token was
+            # never forwarded, so its KV is absent by construction)
+            kv_len = int(self.lengths[i])
+            toks = list(map(int, s.req.prompt)) + s.out[:kv_len
+                                                        - len(s.req.prompt)]
+            ncover = blocks_for(kv_len, self.block_size)
+            self.prefix.insert(toks[:kv_len], s.blocks[:ncover])
+            if s.blocks[ncover:]:
+                self.kv.release(s.blocks[ncover:])
+        else:
+            self.kv.free(s.blocks)          # blocks recycle immediately
         self.slots[i] = None
         self.tables[i] = self.trash
         self.lengths[i] = 0
 
+    # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
         while self.waiting and None in self.slots:
-            req = self.waiting[0]
-            need = blocks_for(len(req.prompt) + req.max_new, self.block_size)
-            try:
-                blocks = self.kv.alloc(need)
-            except CacheFull:
-                if not any(s is not None for s in self.slots):
-                    raise   # empty engine and still no room: cannot ever fit
-                return      # wait for running sequences to free blocks
+            if not self._try_admit(self.waiting[0]):
+                return
             self.waiting.popleft()
-            slot = self.slots.index(None)
-            self._prefill_into(slot, req, blocks)
-            self.stats["prefills"] += 1
-            self.stats["admit_steps"].append(self.stats["steps"])
 
-    def _prefill_into(self, slot: int, req: Request,
-                      blocks: List[int]) -> None:
+    def _try_admit(self, req: Request) -> bool:
+        bs = self.block_size
         plen = len(req.prompt)
-        s_pad = blocks_for(plen, self.block_size) * self.block_size
-        toks = np.zeros((1, s_pad), np.int32)
-        toks[0, :plen] = req.prompt
-        row = np.full((1, self.max_blocks), self.trash, np.int32)
-        row[0, :len(blocks)] = blocks
-        logits, self.pool = self._prefill(self.params, jnp.asarray(toks),
-                                          self.pool, jnp.asarray(row))
-        first = sample_token(np.asarray(logits[0, plen - 1], np.float32),
-                             req.temperature, self._rng)
-        self.slots[slot] = _Active(req, blocks, first)
-        self.tables[slot] = row[0]
-        self.lengths[slot] = plen
+        m, mblocks = (self.prefix.match(req.prompt, limit=plen - 1)
+                      if self.prefix is not None else (0, []))
 
+        def plan(m):
+            s_pad = min(blocks_for(plen - m, bs) * bs,
+                        self.max_blocks * bs - m)
+            total = max(blocks_for(plen + req.max_new, bs),
+                        blocks_for(m + s_pad, bs))
+            return s_pad, total
+
+        n_full, partial = m // bs, m % bs
+        s_pad, total = plan(m)
+        # aliased full blocks cover table slots [0, n_full); fresh blocks
+        # cover the rest — on a partial match fresh[0] is the COW fork
+        # destination replacing the partially-matched source block
+        n_fresh = total - n_full
+        try:
+            fresh = self.kv.alloc(n_fresh) if n_fresh > 0 else []
+        except CacheFull:
+            # the match's own refs may be pinning evictable blocks: drop
+            # the reuse and retry cold before giving up
+            if mblocks:
+                self.kv.release(mblocks)
+                m, mblocks, n_full, partial = 0, [], 0, 0
+                s_pad, total = plan(0)
+                try:
+                    fresh = self.kv.alloc(total)
+                except CacheFull:
+                    return self._admit_stalled()
+            else:
+                return self._admit_stalled()
+
+        if partial:
+            # the match ends inside a shared block: fork it so the suffix
+            # write never touches the cached copy
+            src, dst = mblocks[-1], fresh[0]
+            self.pool = self._cow(self.pool, jnp.asarray(src, jnp.int32),
+                                  jnp.asarray(dst, jnp.int32))
+            self.kv.release([src])
+            blocks = mblocks[:n_full] + fresh
+            self.stats["cow_forks"] += 1
+        else:
+            blocks = mblocks + fresh
+
+        slot = self.slots.index(None)
+        row = np.full((self.max_blocks,), self.trash, np.int32)
+        row[:len(blocks)] = blocks
+        if self.hybrid:
+            self.pool = self._ssm_reset(self.pool,
+                                        jnp.asarray(slot, jnp.int32))
+        s = _Active(req, blocks, row, pos=m)
+        self.slots[slot] = s
+        self.stats["prefills"] += 1
+        self.stats["cached_tokens"] += m
+        self.stats["prefill_tokens"] += plen - m
+        self.stats["admit_steps"].append(self.stats["steps"])
+        if self.prefill_chunk is None:
+            self._prefill_span(slot, s, span=s_pad)   # whole suffix at once
+        return True
+
+    def _admit_stalled(self) -> bool:
+        if not any(s is not None for s in self.slots):
+            raise CacheFull(
+                "cannot admit into an empty engine: pool exhausted even "
+                "after prefix-cache eviction (blocks pinned by sessions?)")
+        return False    # wait for running sequences to release blocks
+
+    # ---------------------------------------------------------- prefill
+    def _prefill_span(self, slot: int, s: _Active, span: int) -> None:
+        """Prefill ``span`` token positions starting at ``s.pos``; samples
+        the first token and installs the decode view on the final span."""
+        bs = self.block_size
+        prompt, plen = s.req.prompt, len(s.req.prompt)
+        start = s.pos
+        span = min(span, self.max_blocks * bs - start)
+        real = min(plen - start, span)
+        if self.hybrid:
+            # a recurrent scan has no causal mask to hide right-padding:
+            # pad garbage would advance the mamba2 state, so hybrid spans
+            # are exact (one compile per distinct span length)
+            span = real
+        toks = np.zeros((1, span), np.int32)
+        toks[0, :real] = prompt[start:start + real]
+        row = s.row[None]
+        args = [self.params, jnp.asarray(toks), self.pool,
+                jnp.asarray(row), jnp.asarray([start], jnp.int32)]
+        if self.hybrid:
+            args.append(jnp.asarray(slot, jnp.int32))
+        logits, self.pool = self._prefill(*args)
+        s.pos = start + real
+        if s.pos >= plen:                       # final span: sample token 1
+            lg = np.asarray(logits[0, plen - 1 - start], np.float32)
+            s.pending, s.pending_lp = self._sample(lg, s.req.temperature)
+            self.tables[slot] = s.row
+            self.lengths[slot] = plen
+
+    def _prefill_chunks(self) -> None:
+        if self.prefill_chunk is None:
+            return
+        for i, s in enumerate(self.slots):
+            if s is not None and s.pending is None:
+                self._prefill_span(i, s, span=self.prefill_chunk)
+                self.stats["chunk_steps"] += 1
+
+    # ----------------------------------------------------------- decode
     def _decode_active(self) -> None:
         # a slot whose pending token already completes the request skips
-        # decode and waits for _retire — its last token needs no forward
+        # decode and waits for _retire — its last token needs no forward;
+        # slots still prefilling (pending None) present trash rows/len 0
         active = [i for i, s in enumerate(self.slots)
-                  if s is not None and len(s.out) + 1 < s.req.max_new]
+                  if s is not None and s.pending is not None
+                  and len(s.out) + 1 < s.req.max_new]
         if not active:
             return
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.pending is None]
+        old_ssm = self.pool["ssm"] if (self.hybrid and prefilling) else None
         tok = np.zeros((self.max_batch, 1), np.int32)
         for i in active:
             tok[i, 0] = self.slots[i].pending
         logits, self.pool = self._decode(
             self.params, jnp.asarray(tok), self.pool,
             jnp.asarray(self.tables), jnp.asarray(self.lengths))
+        if old_ssm is not None:
+            # a decode step must not advance the recurrent state of slots
+            # whose prompt is still mid-chunked-prefill
+            mask = np.zeros((self.max_batch,), bool)
+            mask[prefilling] = True
+            self.pool = self._ssm_restore(self.pool, old_ssm,
+                                          jnp.asarray(mask))
         lg = np.asarray(logits[:, 0], np.float32)
         for i in active:
             s = self.slots[i]
             s.out.append(s.pending)
+            s.lps.append(s.pending_lp)
             self.lengths[i] += 1            # pending now lives in the cache
-            s.pending = sample_token(lg[i], s.req.temperature, self._rng)
+            s.pending, s.pending_lp = self._sample(lg[i], s.req.temperature)
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(active)
+
+    # ----------------------------------------------------------- sampling
+    def _sample(self, row: np.ndarray, temperature: float):
+        tok = sample_token(row, temperature, self._rng)
+        if not self.capture_logprobs:
+            return tok, 0.0
+        # same convention as RolloutEngine.generate (logits / max(t, 1e-6)):
+        # greedy fragments carry lp ~= 0 for the argmax token, so engine-
+        # backed and loop-backed behavior logprobs are comparable in the IS
+        # ratios downstream
+        z = (row - row.max()) / max(temperature, 1e-6)
+        lp = float(z[tok] - np.log(np.exp(z).sum()))
+        return tok, lp

@@ -13,11 +13,13 @@ collect:
 bench-serving:
 	$(PY) -m benchmarks.serving_throughput
 
-# CI-sized serving benchmarks: continuous batching + prefix cache on tiny
-# configs (fast mode).  Exercises the full benchmark harness path.
+# CI-sized serving benchmarks: continuous batching + prefix cache + paged
+# decode on tiny configs (fast mode).  Exercises the full benchmark harness
+# path; paged_decode ENFORCES the >=2x decode-speedup bar at 25% occupancy.
 bench-smoke:
 	$(PY) -m benchmarks.run --only serving_throughput --fast
 	$(PY) -m benchmarks.run --only prefix_cache --fast
+	$(PY) -m benchmarks.run --only paged_decode --fast
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

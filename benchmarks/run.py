@@ -20,6 +20,7 @@ SUITES = [
     ("pd_disagg", "S3.6.2: PD disaggregation tail latency"),
     ("serving_throughput", "S3.6: continuous vs static batching tok/s"),
     ("prefix_cache", "S3.6: radix prefix cache on agentic workloads"),
+    ("paged_decode", "S3.6: in-place paged decode vs full-view gather"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

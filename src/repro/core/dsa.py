@@ -142,6 +142,32 @@ def _gather_tokens(kv: jax.Array, idx: jax.Array) -> jax.Array:
     return sel.reshape(B, S, K, KVH, dh)
 
 
+def _attend_selected(q: jax.Array, k_sel: jax.Array, v_sel: jax.Array,
+                     ok: jax.Array, *, softcap: float = 0.0,
+                     return_probs: bool = False):
+    """Attention over an already-gathered token selection.
+
+    q (B,S,H,dh); k_sel/v_sel (B,S,K,KVH,d*); ok (B,S,K) validity.  Shared
+    by the view-gather path (``sparse_token_attention``) and the paged
+    decode path (``dsa_decode_paged``), which gathers straight from the
+    block pool.
+    """
+    B, S, H, dh = q.shape
+    KVH = k_sel.shape[3]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, dh)
+    scores = jnp.einsum("bsjgd,bskjd->bsjgk", qg.astype(jnp.float32),
+                        k_sel.astype(jnp.float32)) * (dh ** -0.5)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(ok[:, :, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bsjgk,bskjd->bsjgd", probs.astype(v_sel.dtype), v_sel)
+    if return_probs:
+        return out.reshape(B, S, H, -1), probs.mean(axis=(2, 3))  # (B,S,K)
+    return out.reshape(B, S, H, -1)
+
+
 def sparse_token_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            idx: jax.Array, valid: jax.Array,
                            q_positions: jax.Array, kv_positions: jax.Array,
@@ -153,25 +179,56 @@ def sparse_token_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     are re-checked against causality (idx comes from masked scores, but the
     guard keeps the op safe under padding).
     """
-    B, S, H, dh = q.shape
-    KVH = k.shape[2]
-    G = H // KVH
+    B = q.shape[0]
     k_sel = _gather_tokens(k, idx)                        # (B,S,K,KVH,dh)
     v_sel = _gather_tokens(v, idx)
     sel_pos = jnp.take_along_axis(kv_positions, idx.reshape(B, -1), axis=1
                                   ).reshape(idx.shape)
     ok = valid & (sel_pos <= q_positions[..., None])
-    qg = q.reshape(B, S, KVH, G, dh)
-    scores = jnp.einsum("bsjgd,bskjd->bsjgk", qg.astype(jnp.float32),
-                        k_sel.astype(jnp.float32)) * (dh ** -0.5)
-    if softcap > 0:
-        scores = softcap * jnp.tanh(scores / softcap)
-    scores = jnp.where(ok[:, :, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bsjgk,bskjd->bsjgd", probs.astype(v.dtype), v_sel)
-    if return_probs:
-        return out.reshape(B, S, H, -1), probs.mean(axis=(2, 3))  # (B,S,K)
-    return out.reshape(B, S, H, -1)
+    return _attend_selected(q, k_sel, v_sel, ok, softcap=softcap,
+                            return_probs=return_probs)
+
+
+def dsa_decode_paged(idx_params, q: jax.Array, k_pool: jax.Array,
+                     v_pool: jax.Array, x_q: jax.Array, ki_pool: jax.Array,
+                     block_tables: jax.Array, seq_lens: jax.Array,
+                     q_positions: jax.Array, cfg: ModelConfig, *,
+                     softcap: float = 0.0,
+                     impl: Optional[str] = None) -> jax.Array:
+    """One-token DSA decode straight off the block pool (no gathered view).
+
+    Indexer scores are computed against the k_idx pool in place
+    (``paged_indexer_scores``); the top-k TOKEN indices come back in view
+    coordinates (== absolute positions) and are composed with the block
+    table (``paged_take``), so only K selected tokens are gathered instead
+    of the whole padded view.  Selection and attention math match the
+    gather path token-for-token.
+
+    q (B,1,H,dh); pools (nb,bs,·); x_q (B,1,D) pre-projection hiddens;
+    seq_lens (B,) = query positions; q_positions (B,1).
+    """
+    from repro.core.paging import paged_take
+    from repro.kernels.paged_attention.ops import paged_indexer_scores
+    dsa = cfg.dsa
+    B = q.shape[0]
+    q_idx = (x_q @ idx_params["wq_idx"])[:, 0].reshape(
+        B, dsa.index_heads, dsa.index_head_dim)
+    w = jax.nn.softmax((x_q @ idx_params["w_head"]).astype(jnp.float32),
+                       -1)[:, 0]                           # (B, Hi)
+    scores = paged_indexer_scores(q_idx, w, ki_pool, block_tables,
+                                  seq_lens, impl=impl)     # (B, T) fp32
+    T = scores.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask = attention_mask(q_positions, kv_positions, causal=True)
+    idx, valid = select_topk(scores[:, None], mask, dsa.top_k,
+                             deterministic=dsa.deterministic_topk,
+                             noise_key=None if dsa.deterministic_topk
+                             else jax.random.key(0))       # (B,1,K)
+    k_sel = paged_take(k_pool, block_tables, idx[:, 0])[:, None]
+    v_sel = paged_take(v_pool, block_tables, idx[:, 0])[:, None]
+    # view index == absolute position: the selected indices ARE sel_pos
+    ok = valid & (idx <= q_positions[..., None])
+    return _attend_selected(q, k_sel, v_sel, ok, softcap=softcap)
 
 
 def sparse_block_attention(q: jax.Array, k: jax.Array, v: jax.Array,

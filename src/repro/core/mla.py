@@ -162,22 +162,39 @@ def mla_decode_absorbed(params, x: jax.Array, cfg: ModelConfig, *,
 
 def mla_decode_paged(params, x: jax.Array, cfg: ModelConfig, *,
                      c_pool: jax.Array, kr_pool: jax.Array,
-                     block_tables: jax.Array, positions: jax.Array
+                     block_tables: jax.Array, positions: jax.Array,
+                     impl: Optional[str] = None
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Absorbed decode over a PAGED latent cache (block pool + table).
 
     c_pool (nb,bs,kv_lora); kr_pool (nb,bs,rope); block_tables (B,mb);
     positions (B,S) absolute positions of x's tokens.  New latents are
-    scattered through the table; attention runs over the gathered view,
-    whose index equals absolute position, so the causal mask alone masks
-    the unwritten tail of each sequence's last block.
+    scattered through the table.  Single-token steps (S == 1, the decode
+    hot loop) read the latent pool IN PLACE through the paged-attention
+    kernel — O(live tokens) traffic; multi-token spans (chunked prefill)
+    keep the gathered view, whose index equals absolute position, so the
+    causal mask alone masks the unwritten tail of each sequence's last
+    block.  ``impl`` selects kernel vs gather oracle for S == 1 (see
+    ``repro.kernels.paged_attention.ops``).
     """
     from repro.core.paging import paged_update, paged_view
+    m = cfg.mla
     B, S, _ = x.shape
     q_nope, q_rope, c_new, kr_new = _absorbed_q_and_latents(
         params, x, cfg, positions)
     c_pool = paged_update(c_pool, c_new, block_tables, positions)
     kr_pool = paged_update(kr_pool, kr_new, block_tables, positions)
+    if S == 1:
+        from repro.kernels.paged_attention.ops import paged_mla_attend
+        wk, wv = _wkv_b_split(params, cfg)
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
+                           wk.astype(jnp.float32))
+        out_lat = paged_mla_attend(
+            q_lat, q_rope, c_pool, kr_pool, block_tables, positions[:, 0],
+            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5, impl=impl)
+        out = jnp.einsum("bshl,lhv->bshv", out_lat, wv.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(B, S, -1) @ params["wo"]
+        return out, c_pool, kr_pool
     c_view = paged_view(c_pool, block_tables)       # (B, mb*bs, kv_lora)
     kr_view = paged_view(kr_pool, block_tables)
     T = c_view.shape[1]

@@ -53,8 +53,45 @@ def paged_view(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
 
     pool (nb, bs, *f) + tables (B, max_blocks) -> (B, max_blocks*bs, *f),
     where view index == absolute position (blocks are position-ordered).
+
+    This copies the ENTIRE padded view — O(pool capacity) HBM traffic per
+    call.  Prefill amortizes that over a whole span; the decode hot loop
+    must NOT call it (see ``repro.kernels.paged_attention``, which reads
+    blocks in place; this gather survives there as the ``impl="ref"``
+    oracle).
     """
     B, mb = block_tables.shape
     bs = pool.shape[1]
     v = pool[block_tables]                       # (B, mb, bs, *f)
     return v.reshape((B, mb * bs) + pool.shape[2:])
+
+
+def paged_take(pool: jnp.ndarray, block_tables: jnp.ndarray,
+               idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather individual tokens by per-sequence VIEW positions.
+
+    pool (nb, bs, *f); idx (B, K) view positions (== absolute positions)
+    -> (B, K, *f).  Composes the position->block indirection through the
+    table (``flat = table[b, p // bs] * bs + p % bs``), so only K tokens
+    move — this is how the DSA decode path applies its top-k without
+    materializing the gathered view.
+    """
+    nb, bs = pool.shape[:2]
+    blk = jnp.take_along_axis(block_tables, idx // bs, axis=1)
+    flat = blk * bs + idx % bs                   # (B, K)
+    return pool.reshape((nb * bs,) + pool.shape[2:])[flat]
+
+
+def copy_block(leaf: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray, *,
+               axis: int = 0) -> jnp.ndarray:
+    """Copy ONE block ``src`` -> ``dst`` along a pool leaf's block axis.
+
+    The copy-on-write fork primitive: under ``jax.jit(...,
+    donate_argnums=...)`` the update happens in the donated buffer, so a
+    fork moves ``block_size`` rows instead of round-tripping the whole
+    pool through HBM.  ``axis`` is 0 for flat leaves (nb, bs, *f) and 1
+    for layer-stacked leaves (layers, nb, bs, *f).
+    """
+    if axis == 0:
+        return leaf.at[dst].set(leaf[src])
+    return leaf.at[:, dst].set(leaf[:, src])

@@ -10,9 +10,25 @@ Time-recurrences (mamba selective scan) stay scanned even when set — their
 FLOPs are corrected analytically in the roofline report (see
 EXPERIMENTS.md §Roofline notes).
 """
+import os
+
 UNROLL_SCANS = False
 
 
 def scan_unroll():
     """Value to pass as lax.scan(..., unroll=...)."""
     return True if UNROLL_SCANS else 1
+
+
+def paged_attention_impl() -> str:
+    """Default decode impl for the paged-attention ops ('pallas' | 'ref').
+
+    'pallas' means *read KV blocks in place* — the Pallas kernel on TPU, an
+    O(live-tokens) XLA twin elsewhere (see repro.kernels.paged_attention.ops
+    for the full dispatch, incl. JAX_PALLAS_INTERPRET=1).  'ref' restores
+    the full-view gather path.  The ops resolve this EAGERLY per call (the
+    jit cache is keyed on the resolved path); a ContinuousEngine snapshots
+    it at construction for its stats and bakes it into its per-instance
+    jits on first trace — flip the env before constructing the engine.
+    """
+    return os.environ.get("REPRO_PAGED_ATTN_IMPL", "pallas")

@@ -1,0 +1,74 @@
+"""Gather-path oracles for the paged-attention decode kernels.
+
+These are the EXACT pre-kernel implementations (materialize the padded
+per-sequence view with ``paged_view``, then run the dense/absorbed/indexer
+math over it), kept verbatim so ``impl="ref"`` reproduces the old engine
+byte-for-byte and parity is testable on any backend.  The prefill path
+still uses this gather (a whole span amortizes the copy); only the decode
+hot loop switched to in-place block reads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.paging import paged_view
+from repro.layers.attention import NEG_INF, dense_attention
+
+
+def paged_gqa_reference(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, seq_lens: jax.Array, *,
+                        window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """q (B, 1, H, d) -> (B, 1, H, d): gather the view, dense-attend."""
+    B = q.shape[0]
+    k_full = paged_view(k_pool, block_tables)
+    v_full = paged_view(v_pool, block_tables)
+    T = k_full.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    return dense_attention(q, k_full, v_full, seq_lens[:, None],
+                           kv_positions, causal=True, window=window,
+                           softcap=softcap, q_chunk=0)
+
+
+def paged_mla_reference(q_lat: jax.Array, q_rope: jax.Array,
+                        c_pool: jax.Array, kr_pool: jax.Array,
+                        block_tables: jax.Array, seq_lens: jax.Array, *,
+                        scale: float) -> jax.Array:
+    """Absorbed MQA scores/PV over the gathered latent view.
+
+    q_lat (B, 1, H, lora); q_rope (B, 1, H, rope) -> out_lat
+    (B, 1, H, lora) fp32 — the ``probs · c`` term of
+    ``repro.core.mla._absorbed_attend``, einsum-for-einsum.
+    """
+    B = q_lat.shape[0]
+    c_view = paged_view(c_pool, block_tables)            # (B, T, lora)
+    kr_view = paged_view(kr_pool, block_tables)
+    T = c_view.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    scores = (jnp.einsum("bshl,btl->bsht", q_lat.astype(jnp.float32),
+                         c_view.astype(jnp.float32))
+              + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                           kr_view.astype(jnp.float32)))
+    scores = scores * scale
+    mask = kv_pos[:, None, :] <= seq_lens[:, None, None]     # (B, 1, T)
+    scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bsht,btl->bshl", probs, c_view.astype(jnp.float32))
+
+
+def paged_indexer_reference(q_idx: jax.Array, w_head: jax.Array,
+                            k_pool: jax.Array, block_tables: jax.Array,
+                            seq_lens: jax.Array) -> jax.Array:
+    """Indexer scores over the gathered k_idx view (B, mb*bs) fp32.
+
+    Same contraction as ``repro.core.dsa.indexer_scores`` with S=1:
+    relu(q·k)·scale, head-weighted sum.  ``seq_lens`` is unused (the
+    selector masks dead positions) but kept for signature parity.
+    """
+    del seq_lens
+    Di = q_idx.shape[-1]
+    k_view = paged_view(k_pool, block_tables)            # (B, T, Di)
+    dots = jnp.einsum("bhd,btd->bht", q_idx.astype(jnp.float32),
+                      k_view.astype(jnp.float32))
+    dots = jax.nn.relu(dots) * (Di ** -0.5)
+    return jnp.einsum("bht,bh->bt", dots, w_head.astype(jnp.float32))

@@ -51,7 +51,8 @@ def init(key, cfg: ModelConfig, dtype=jnp.float32,
 def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
            cache: Optional[dict] = None, cache_index=None, mesh=None,
            sparse: Optional[bool] = None, frontend_embeds=None,
-           positions=None, block_tables: Optional[jax.Array] = None
+           positions=None, block_tables: Optional[jax.Array] = None,
+           paged_impl: Optional[str] = None
            ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """``block_tables`` pages the shared-attention KV cache (the mamba2
     recurrent states stay per-slot — they are O(1) per sequence already);
@@ -89,7 +90,8 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
         h_carry, new_kv, _ = tfm.apply_block(
             params["shared_attn"], h_carry, cfg, positions, "global",
             moe=False, sparse=sparse, mesh=mesh, cache=g_kv,
-            cache_index=cache_index, block_tables=block_tables)
+            cache_index=cache_index, block_tables=block_tables,
+            paged_impl=paged_impl)
         return h_carry, (new_ssm, new_kv)
 
     if cache is None:
@@ -182,13 +184,15 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 
 def prefill(params, tokens, cfg: ModelConfig, cache, *, sparse=None,
-            mesh=None, block_tables=None, cache_index=None, **kw):
+            mesh=None, block_tables=None, cache_index=None,
+            paged_impl=None, **kw):
     if cache_index is None:
         cache_index = jnp.zeros((), jnp.int32)
     h, _, new_cache = hidden(params, tokens, cfg, cache=cache,
                              cache_index=cache_index,
                              sparse=sparse, mesh=mesh,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             paged_impl=paged_impl)
     if block_tables is not None:
         return logits_from_hidden(params["embed"], h, cfg), new_cache
     lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
@@ -196,8 +200,10 @@ def prefill(params, tokens, cfg: ModelConfig, cache, *, sparse=None,
 
 
 def decode_step(params, token, cfg: ModelConfig, cache, cache_index,
-                *, sparse=None, mesh=None, block_tables=None):
+                *, sparse=None, mesh=None, block_tables=None,
+                paged_impl=None):
     h, _, new_cache = hidden(params, token, cfg, cache=cache,
                              cache_index=cache_index, sparse=sparse,
-                             mesh=mesh, block_tables=block_tables)
+                             mesh=mesh, block_tables=block_tables,
+                             paged_impl=paged_impl)
     return logits_from_hidden(params["embed"], h, cfg), new_cache

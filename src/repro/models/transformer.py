@@ -61,16 +61,20 @@ def build_block(b: Builder, cfg: ModelConfig, kind: str, moe: bool):
 def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
             kind: str, *, sparse: bool, cache: Optional[dict],
             cache_index: Optional[jax.Array], mesh=None,
-            block_tables: Optional[jax.Array] = None
+            block_tables: Optional[jax.Array] = None,
+            paged_impl: Optional[str] = None
             ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Attention sub-layer on normed hidden h.
     Returns (out, new_cache, indexer aux loss).
 
     With ``block_tables`` (B, max_blocks) the cache leaves are PAGED block
     pools (num_blocks, block_size, ...): new tokens are scattered through
-    the table at ``positions`` and attention runs over the gathered
-    per-sequence view, whose index equals absolute position — so the plain
-    causal mask covers garbage beyond each sequence's length."""
+    the table at ``positions``.  Single-token steps (the decode hot loop)
+    then read KV blocks IN PLACE through the paged-attention kernels
+    (``paged_impl`` selects kernel vs gather oracle); multi-token spans
+    (prefill) attend over the gathered per-sequence view, whose index
+    equals absolute position — so the plain causal mask covers garbage
+    beyond each sequence's length."""
     zero = jnp.zeros((), jnp.float32)
     B, S, D = h.shape
     window = cfg.sliding_window if kind == "local" else 0
@@ -93,7 +97,8 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
         if block_tables is not None:
             out, c_cache, kr_cache = mla_mod.mla_decode_paged(
                 ap, h, cfg, c_pool=cache["c"], kr_pool=cache["kr"],
-                block_tables=block_tables, positions=positions)
+                block_tables=block_tables, positions=positions,
+                impl=paged_impl)
         else:
             out, c_cache, kr_cache = mla_mod.mla_decode_absorbed(
                 ap, h, cfg, c_cache=cache["c"], kr_cache=cache["kr"],
@@ -123,7 +128,27 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
         k_pool = paged_update(cache["k"], k, block_tables, positions)
         v_pool = paged_update(cache["v"], v, block_tables, positions)
         new_cache = dict(cache, k=k_pool, v=v_pool)
-        k_full = paged_view(k_pool, block_tables)
+        if S == 1:
+            # decode hot loop: read KV blocks in place — no gathered view
+            if use_dsa:
+                ki_pool = paged_update(
+                    cache["k_idx"],
+                    dsa_mod.indexer_keys(params["idx"], h, cfg.dsa),
+                    block_tables, positions)
+                new_cache["k_idx"] = ki_pool
+                out = dsa_mod.dsa_decode_paged(
+                    params["idx"], q, k_pool, v_pool, h, ki_pool,
+                    block_tables, positions[:, 0], positions, cfg,
+                    softcap=cfg.attn_logit_softcap, impl=paged_impl)
+            else:
+                from repro.kernels.paged_attention.ops import \
+                    paged_gqa_attend
+                out = paged_gqa_attend(
+                    q, k_pool, v_pool, block_tables, positions[:, 0],
+                    window=window, softcap=cfg.attn_logit_softcap,
+                    impl=paged_impl)
+            return out.reshape(B, S, -1) @ ap["wo"], new_cache, zero
+        k_full = paged_view(k_pool, block_tables)     # prefill span: gather
         v_full = paged_view(v_pool, block_tables)
         T = k_full.shape[1]
         kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
@@ -180,7 +205,8 @@ def apply_block(params, h: jax.Array, cfg: ModelConfig,
                 sparse: bool = False, mesh=None,
                 cache: Optional[dict] = None,
                 cache_index: Optional[jax.Array] = None,
-                block_tables: Optional[jax.Array] = None
+                block_tables: Optional[jax.Array] = None,
+                paged_impl: Optional[str] = None
                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     _cb = constrain_batch_seq if cfg.seq_parallel else constrain_batch
     h = _cb(h, mesh)
@@ -188,7 +214,8 @@ def apply_block(params, h: jax.Array, cfg: ModelConfig,
     a_out, new_cache, ind_kl = _attend(params, a_in, cfg, positions, kind,
                                        sparse=sparse, cache=cache,
                                        cache_index=cache_index, mesh=mesh,
-                                       block_tables=block_tables)
+                                       block_tables=block_tables,
+                                       paged_impl=paged_impl)
     h = h + _cb(a_out, mesh)
     m_in = rmsnorm(params, h, cfg.norm_eps, "mlp_norm")
     if moe:
@@ -235,7 +262,8 @@ def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
 # ---------------------------------------------------------------------------
 
 def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
-                 caches: Optional[dict], cache_index, block_tables=None):
+                 caches: Optional[dict], cache_index, block_tables=None,
+                 paged_impl=None):
     """Scan over layer groups; caches is {'slotJ': stacked_cache} or None.
 
     Without caches (training) the scan body covers ``remat_group``
@@ -257,7 +285,8 @@ def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
                                       positions=positions, kind=kind,
                                       moe=moe, sparse=sparse, mesh=mesh,
                                       cache=c_j, cache_index=cache_index,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      paged_impl=paged_impl)
             new_caches.append(c_new)
             aux = aux + a
         return h, aux, new_caches
@@ -311,12 +340,15 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
            sparse: Optional[bool] = None, mesh=None,
            cache: Optional[dict] = None,
            cache_index: Optional[jax.Array] = None,
-           block_tables: Optional[jax.Array] = None
+           block_tables: Optional[jax.Array] = None,
+           paged_impl: Optional[str] = None
            ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """Returns (final-normed hidden (B,S_total,D), aux loss, new cache).
 
     ``block_tables`` switches the cache to the paged block-pool layout;
-    ``cache_index`` is then the per-sequence length vector (B,)."""
+    ``cache_index`` is then the per-sequence length vector (B,).
+    ``paged_impl`` picks the paged decode path ('pallas' in-place kernel |
+    'ref' gather oracle; None = repro.flags default)."""
     if sparse is None:
         sparse = cfg.dsa is not None
     B, S = tokens.shape
@@ -341,7 +373,8 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
                                   "global", moe=False, sparse=sparse,
                                   mesh=mesh, cache=c_i,
                                   cache_index=cache_index,
-                                  block_tables=block_tables)
+                                  block_tables=block_tables,
+                                  paged_impl=paged_impl)
         aux = aux + a
         if new_cache is not None:
             new_cache[f"dense_{i}"] = c_new
@@ -349,7 +382,8 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
         params, h, cfg, positions, sparse=sparse, mesh=mesh,
         caches={k: v for k, v in cache.items() if k.startswith("slot")}
         if cache is not None else None,
-        cache_index=cache_index, block_tables=block_tables)
+        cache_index=cache_index, block_tables=block_tables,
+        paged_impl=paged_impl)
     aux = aux + aux_s
     if new_cache is not None and scan_caches is not None:
         new_cache.update(scan_caches)
@@ -471,7 +505,8 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
             frontend_embeds: Optional[jax.Array] = None, sparse=None,
             mesh=None, block_tables: Optional[jax.Array] = None,
-            cache_index: Optional[jax.Array] = None
+            cache_index: Optional[jax.Array] = None,
+            paged_impl: Optional[str] = None
             ) -> Tuple[jax.Array, dict]:
     """Fill the cache with the prompt; returns (last-position logits, cache).
 
@@ -484,7 +519,8 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
                              frontend_embeds=frontend_embeds, sparse=sparse,
                              mesh=mesh, cache=cache,
                              cache_index=cache_index,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             paged_impl=paged_impl)
     if block_tables is not None:
         return logits_from_hidden(params["embed"], h, cfg), new_cache
     lg = logits_from_hidden(params["embed"], h[:, -1:], cfg)
@@ -493,13 +529,17 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
 
 def decode_step(params, token: jax.Array, cfg: ModelConfig, cache: dict,
                 cache_index: jax.Array, *, sparse=None, mesh=None,
-                block_tables: Optional[jax.Array] = None
+                block_tables: Optional[jax.Array] = None,
+                paged_impl: Optional[str] = None
                 ) -> Tuple[jax.Array, dict]:
     """token (B,1) -> (logits (B,1,V), new cache).  One serve_step.
 
     With ``block_tables``, ``cache`` is a block pool and ``cache_index`` the
-    per-sequence length vector (B,) — the continuous-batching layout."""
+    per-sequence length vector (B,) — the continuous-batching layout; KV
+    blocks are then read in place (``paged_impl='ref'`` restores the
+    gather)."""
     h, _, new_cache = hidden(params, token, cfg, sparse=sparse, mesh=mesh,
                              cache=cache, cache_index=cache_index,
-                             block_tables=block_tables)
+                             block_tables=block_tables,
+                             paged_impl=paged_impl)
     return logits_from_hidden(params["embed"], h, cfg), new_cache

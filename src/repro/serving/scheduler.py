@@ -15,8 +15,15 @@ keeps ``max_batch`` decode *slots* and, every step,
      step), so one huge prompt cannot stall the decode batch
      (the §3.6.2 prefill/decode interference, engine-side);
   4. runs ONE batched decode step for every decoding sequence, each at
-     its own position, through the block-table gather
-     (``models/*.decode_step(..., block_tables=...)``).
+     its own position (``models/*.decode_step(..., block_tables=...)``).
+     The decode step reads KV blocks IN PLACE through the paged-attention
+     kernels (``repro.kernels.paged_attention``) — O(live tokens) HBM
+     traffic instead of the old full-view ``paged_view`` gather, which
+     copied B × max_blocks × block_size tokens per step regardless of
+     occupancy.  ``attn_impl="ref"`` restores the gather (the parity
+     oracle); ``stats["gather_bytes_saved"]`` tracks the traffic the
+     in-place path avoided.  Prefill spans still gather: a whole span
+     amortizes the copy.
 
 Prefix reuse (``prefix_cache=True``, attention-cache families): on admit
 the engine asks the radix cache (``repro.serving.prefix_cache``) for the
@@ -87,7 +94,8 @@ class ContinuousEngine:
                  max_len: int = 512, seed: int = 0,
                  prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
-                 capture_logprobs: bool = False):
+                 capture_logprobs: bool = False,
+                 attn_impl: Optional[str] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
                 f"ContinuousEngine supports transformer + hybrid families, "
@@ -128,11 +136,26 @@ class ContinuousEngine:
         self.stats = {"steps": 0, "prefills": 0, "decode_steps": 0,
                       "decode_tokens": 0, "admit_steps": [],
                       "prefill_tokens": 0, "cached_tokens": 0,
-                      "cow_forks": 0, "chunk_steps": 0}
-        self._decode = jax.jit(self._decode_fn)
+                      "cow_forks": 0, "chunk_steps": 0,
+                      "gather_bytes_saved": 0}
+        # 'pallas' reads KV blocks in place during decode; 'ref' restores
+        # the full-view gather (byte-identical greedy — the parity oracle)
+        from repro.kernels.paged_attention.ops import resolve_impl
+        self.attn_impl = attn_impl
+        self._impl_eff = resolve_impl(attn_impl)
+        self._in_place = self._impl_eff != "ref"
+        self._token_bytes = self._pool_token_bytes()
+        # donate the pool through the hot jits: paged_update then scatters
+        # into the live buffer instead of copying the whole pool every step
+        # (hybrid decode keeps the copy — _ssm_restore must read the
+        # pre-step recurrent state, which donation would invalidate)
+        self._decode = jax.jit(self._decode_fn,
+                               donate_argnums=() if self.hybrid else (2,))
         self._prefill = jax.jit(self._hybrid_prefill_fn if self.hybrid
-                                else self._prefill_fn)
-        self._cow = jax.jit(self._cow_fn)
+                                else self._prefill_fn, donate_argnums=(2,))
+        # donating the pool makes the COW fork a single-block in-place
+        # write instead of a whole-pool HBM round trip
+        self._cow = jax.jit(self._cow_fn, donate_argnums=(0,))
         if self.hybrid:
             self._ssm_reset = jax.jit(self._ssm_reset_fn)
             self._ssm_restore = jax.jit(self._ssm_restore_fn)
@@ -140,11 +163,13 @@ class ContinuousEngine:
     # ------------------------------------------------------------------ jit
     def _decode_fn(self, params, tok, pool, tables, lengths):
         return self.model.decode_step(params, tok, self.cfg, pool, lengths,
-                                      block_tables=tables)
+                                      block_tables=tables,
+                                      paged_impl=self.attn_impl)
 
     def _prefill_fn(self, params, toks, pool, table, starts):
         return self.model.prefill(params, toks, self.cfg, pool,
-                                  block_tables=table, cache_index=starts)
+                                  block_tables=table, cache_index=starts,
+                                  paged_impl=self.attn_impl)
 
     def _hybrid_prefill_fn(self, params, toks, pool, table, starts, slot):
         # thread ONE slot's recurrent state through the batch-1 prefill;
@@ -154,7 +179,8 @@ class ContinuousEngine:
             pool["ssm"])
         logits, new = self.model.prefill(
             params, toks, self.cfg, {"ssm": ssm_i, "kv": pool["kv"]},
-            block_tables=table, cache_index=starts)
+            block_tables=table, cache_index=starts,
+            paged_impl=self.attn_impl)
         ssm = jax.tree.map(
             lambda full, one: jax.lax.dynamic_update_slice_in_dim(
                 full, one, slot, axis=1),
@@ -162,18 +188,38 @@ class ContinuousEngine:
         return logits, {"ssm": ssm, "kv": new["kv"]}
 
     def _cow_fn(self, pool, src, dst):
-        """Copy block ``src`` -> ``dst`` across every KV leaf (COW fork)."""
+        """Copy block ``src`` -> ``dst`` across every KV leaf (COW fork).
+
+        Jitted with the pool DONATED, so each leaf update is an in-place
+        single-block ``copy_block`` — a fork moves one block, not the
+        pool."""
+        from repro.core.paging import copy_block
         out = {}
         for k, v in pool.items():
             if k == "ssm":
                 out[k] = v                       # recurrent state: per-slot
             elif k == "kv" or k.startswith("slot"):
                 out[k] = jax.tree.map(            # (layers, nb, bs, ...)
-                    lambda x: x.at[:, dst].set(x[:, src]), v)
+                    lambda x: copy_block(x, src, dst, axis=1), v)
             else:
                 out[k] = jax.tree.map(            # dense_*: (nb, bs, ...)
-                    lambda x: x.at[dst].set(x[src]), v)
+                    lambda x: copy_block(x, src, dst, axis=0), v)
         return out
+
+    def _pool_token_bytes(self) -> int:
+        """Bytes of KV state per token position, summed over layers/leaves
+        (recurrent ssm state excluded — it is per-slot, never gathered)."""
+        tot = 0
+        for k, v in self.pool.items():
+            if k == "ssm":
+                continue
+            stacked = k == "kv" or k.startswith("slot")
+            for leaf in jax.tree.leaves(v):
+                feat = leaf.shape[3:] if stacked else leaf.shape[2:]
+                layers = leaf.shape[0] if stacked else 1
+                tot += layers * int(np.prod(feat, dtype=np.int64)) \
+                    * leaf.dtype.itemsize
+        return tot
 
     def _ssm_reset_fn(self, pool, slot):
         return dict(pool, ssm=jax.tree.map(
@@ -396,6 +442,22 @@ class ContinuousEngine:
             mask[prefilling] = True
             self.pool = self._ssm_restore(self.pool, old_ssm,
                                           jnp.asarray(mask))
+        if self._in_place:
+            # HBM traffic the in-place decode avoided vs the old full-view
+            # gather, which always moved max_batch*max_blocks*block_size
+            # token positions (lengths are still pre-step: qpos=lengths[i]).
+            # The Pallas kernel reads each ROW's live blocks; the XLA
+            # blocked twin (the off-TPU impl) runs every row to the BATCH
+            # max — account for what actually ran.
+            bs = self.block_size
+            if self._impl_eff == "blocked":
+                live = self.max_batch * (int(max(self.lengths)) // bs + 1) \
+                    * bs
+            else:
+                live = sum(int(l) // bs + 1 for l in self.lengths) * bs
+            view = self.max_batch * self.max_blocks * bs
+            self.stats["gather_bytes_saved"] += \
+                (view - live) * self._token_bytes
         lg = np.asarray(logits[:, 0], np.float32)
         for i in active:
             s = self.slots[i]

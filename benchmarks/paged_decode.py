@@ -104,14 +104,14 @@ def _ops_row(occ: float, spread: bool, iters: int) -> Dict:
 
 
 def _decode_step_row(occ: float, iters: int) -> Dict:
-    # first_k_dense=num_layers keeps the layers OUT of the lax.scan: a
-    # scanned cache returns as fresh scan outputs every step (XLA cannot
-    # alias scan carries), which copies the whole pool in BOTH impls and
-    # masks the attention-path difference this suite measures (tracked as
-    # a ROADMAP open item; the decode math is identical either way)
+    # a GENUINELY SCANNED config (first_k_dense=0: both layers ride the
+    # layer lax.scan): the paged pool is layer-major flat and carried as a
+    # scan-invariant, so the step no longer round-trips the stacked pool
+    # through HBM (the old xs/ys layout copied O(pool) per step and masked
+    # the attention-path difference this suite measures)
     cfg = get_smoke_config("yi_6b").replace(
         d_model=256, num_heads=KVH * G, num_kv_heads=KVH, head_dim=D_HEAD,
-        d_ff=512, vocab_size=512, dsa=None, num_layers=2, first_k_dense=2)
+        d_ff=512, vocab_size=512, dsa=None, num_layers=2, first_k_dense=0)
     model = get_model(cfg)
     params, _ = model.init(jax.random.key(0), cfg)
     rng = np.random.default_rng(9)

@@ -21,6 +21,7 @@ SUITES = [
     ("serving_throughput", "S3.6: continuous vs static batching tok/s"),
     ("prefix_cache", "S3.6: radix prefix cache on agentic workloads"),
     ("paged_decode", "S3.6: in-place paged decode vs full-view gather"),
+    ("paged_prefill", "S3.6: in-place paged prefill vs padded-view gather"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

@@ -231,6 +231,55 @@ def dsa_decode_paged(idx_params, q: jax.Array, k_pool: jax.Array,
     return _attend_selected(q, k_sel, v_sel, ok, softcap=softcap)
 
 
+def dsa_prefill_paged(idx_params, q: jax.Array, k_pool: jax.Array,
+                      v_pool: jax.Array, x_q: jax.Array, ki_pool: jax.Array,
+                      block_tables: jax.Array, positions: jax.Array,
+                      cfg: ModelConfig, *, window: int = 0,
+                      softcap: float = 0.0,
+                      impl: Optional[str] = None) -> jax.Array:
+    """Span DSA prefill straight off the block pool (no gathered view).
+
+    The S-token span twin of ``dsa_decode_paged``: indexer scores are
+    computed against the k_idx pool in place (``paged_indexer_prefill``),
+    the per-query top-k TOKEN indices come back in view coordinates
+    (== absolute positions) and are composed with the block table
+    (``paged_take``), so only S·K selected tokens are gathered instead of
+    the whole padded view.  Token-selector only — the block-granular
+    selector keeps the gather path (see ``models.transformer._attend``).
+
+    q (B,S,H,dh); pools (nb,bs,·); x_q (B,S,D) pre-projection hiddens;
+    positions (B,S) = absolute span positions (ascending from a
+    per-sequence start offset).
+    """
+    from repro.core.paging import paged_take
+    from repro.kernels.paged_attention.ops import paged_indexer_prefill
+    dsa = cfg.dsa
+    B, S = q.shape[:2]
+    q_idx = (x_q @ idx_params["wq_idx"]).reshape(
+        B, S, dsa.index_heads, dsa.index_head_dim)
+    w = jax.nn.softmax((x_q @ idx_params["w_head"]).astype(jnp.float32), -1)
+    scores = paged_indexer_prefill(q_idx, w, ki_pool, block_tables,
+                                   positions[:, 0], impl=impl)  # (B,S,T)
+    T = scores.shape[-1]
+    kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask = attention_mask(positions, kv_positions, causal=True,
+                          window=window)
+    idx, valid = select_topk(scores, mask, dsa.top_k,
+                             deterministic=dsa.deterministic_topk,
+                             noise_key=None if dsa.deterministic_topk
+                             else jax.random.key(0))         # (B,S,K)
+    K = idx.shape[-1]
+    k_sel = paged_take(k_pool, block_tables, idx.reshape(B, S * K))
+    v_sel = paged_take(v_pool, block_tables, idx.reshape(B, S * K))
+    k_sel = k_sel.reshape((B, S, K) + k_sel.shape[2:])
+    v_sel = v_sel.reshape((B, S, K) + v_sel.shape[2:])
+    # view index == absolute position: the selected indices ARE sel_pos
+    ok = valid & (idx <= positions[..., None])
+    if window > 0:
+        ok &= (positions[..., None] - idx) < window
+    return _attend_selected(q, k_sel, v_sel, ok, softcap=softcap)
+
+
 def sparse_block_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            block_idx: jax.Array, block_valid: jax.Array,
                            q_positions: jax.Array, kv_positions: jax.Array,

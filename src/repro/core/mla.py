@@ -171,27 +171,38 @@ def mla_decode_paged(params, x: jax.Array, cfg: ModelConfig, *,
     positions (B,S) absolute positions of x's tokens.  New latents are
     scattered through the table.  Single-token steps (S == 1, the decode
     hot loop) read the latent pool IN PLACE through the paged-attention
-    kernel — O(live tokens) traffic; multi-token spans (chunked prefill)
-    keep the gathered view, whose index equals absolute position, so the
-    causal mask alone masks the unwritten tail of each sequence's last
-    block.  ``impl`` selects kernel vs gather oracle for S == 1 (see
-    ``repro.kernels.paged_attention.ops``).
+    decode kernel; multi-token spans (chunked/suffix prefill) read it in
+    place through the paged flash-PREFILL kernel (causal within the span,
+    full attention to the cached prefix) — O(live tokens) traffic either
+    way.  ``impl`` selects kernel vs gather oracle for both (see
+    ``repro.kernels.paged_attention.ops``); ``'ref'`` restores the
+    gathered view, whose index equals absolute position, so the causal
+    mask alone masks the unwritten tail of each sequence's last block.
     """
     from repro.core.paging import paged_update, paged_view
+    from repro.kernels.paged_attention.ops import (paged_mla_attend,
+                                                   paged_mla_prefill,
+                                                   resolve_prefill_impl)
     m = cfg.mla
     B, S, _ = x.shape
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
     q_nope, q_rope, c_new, kr_new = _absorbed_q_and_latents(
         params, x, cfg, positions)
     c_pool = paged_update(c_pool, c_new, block_tables, positions)
     kr_pool = paged_update(kr_pool, kr_new, block_tables, positions)
-    if S == 1:
-        from repro.kernels.paged_attention.ops import paged_mla_attend
+    in_place_span = S > 1 and resolve_prefill_impl(impl) != "ref"
+    if S == 1 or in_place_span:
         wk, wv = _wkv_b_split(params, cfg)
         q_lat = jnp.einsum("bshd,lhd->bshl", q_nope.astype(jnp.float32),
                            wk.astype(jnp.float32))
-        out_lat = paged_mla_attend(
-            q_lat, q_rope, c_pool, kr_pool, block_tables, positions[:, 0],
-            scale=(m.qk_nope_dim + m.qk_rope_dim) ** -0.5, impl=impl)
+        if S == 1:
+            out_lat = paged_mla_attend(
+                q_lat, q_rope, c_pool, kr_pool, block_tables,
+                positions[:, 0], scale=scale, impl=impl)
+        else:
+            out_lat = paged_mla_prefill(
+                q_lat, q_rope, c_pool, kr_pool, block_tables,
+                positions[:, 0], scale=scale, impl=impl)
         out = jnp.einsum("bshl,lhv->bshv", out_lat, wv.astype(jnp.float32))
         out = out.astype(x.dtype).reshape(B, S, -1) @ params["wo"]
         return out, c_pool, kr_pool

@@ -16,6 +16,16 @@ Two invariants the serving layer maintains make the device side trivial:
 * idle batch slots point every table entry at a reserved trash block and
   carry length 0, so their (discarded) writes never touch live state.
 
+Multi-layer models flatten the layer axis INTO the block axis (a
+*layer-major* pool): a stack of L layers over a pool of ``stride`` blocks
+is one ``(L*stride, block_size, *f)`` leaf where layer ``l``'s copy of
+block ``b`` lives at row ``l*stride + b``.  Layer ``l`` addresses the pool
+with ``block_tables + l*stride`` — every primitive below works unchanged —
+and the pool rides a decode-layer ``lax.scan`` as a CARRY instead of
+stacked xs/ys (scan outputs cannot alias inputs, so the old
+``(L, stride, ...)`` layout copied the entire pool every step; a carried
+pool is updated in place by XLA's while-loop aliasing).
+
 Allocation policy (free lists, eviction) is host-side — see
 ``repro.serving.paged.PagedKVCache``.
 """
@@ -55,10 +65,9 @@ def paged_view(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
     where view index == absolute position (blocks are position-ordered).
 
     This copies the ENTIRE padded view — O(pool capacity) HBM traffic per
-    call.  Prefill amortizes that over a whole span; the decode hot loop
-    must NOT call it (see ``repro.kernels.paged_attention``, which reads
-    blocks in place; this gather survives there as the ``impl="ref"``
-    oracle).
+    call.  The engine hot paths (decode AND prefill spans) must NOT call
+    it (see ``repro.kernels.paged_attention``, which reads blocks in
+    place); this gather survives there as the ``impl="ref"`` oracle.
     """
     B, mb = block_tables.shape
     bs = pool.shape[1]
@@ -95,3 +104,18 @@ def copy_block(leaf: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray, *,
     if axis == 0:
         return leaf.at[dst].set(leaf[src])
     return leaf.at[:, dst].set(leaf[:, src])
+
+
+def copy_block_strided(leaf: jnp.ndarray, src: jnp.ndarray,
+                       dst: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Copy block ``src`` -> ``dst`` in EVERY layer of a layer-major pool.
+
+    ``leaf`` is ``(L*stride, block_size, *f)`` with layer ``l``'s blocks at
+    rows ``[l*stride, (l+1)*stride)``; the copy touches rows
+    ``l*stride + src -> l*stride + dst`` for all ``l`` — L·block_size rows,
+    not the pool.  ``stride`` == the per-layer block count; a flat
+    single-layer leaf (L == 1) degenerates to ``copy_block(axis=0)``.
+    """
+    L = leaf.shape[0] // stride
+    base = jnp.arange(L, dtype=jnp.int32) * stride
+    return leaf.at[base + dst].set(leaf[base + src])

@@ -32,3 +32,17 @@ def paged_attention_impl() -> str:
     jits on first trace — flip the env before constructing the engine.
     """
     return os.environ.get("REPRO_PAGED_ATTN_IMPL", "pallas")
+
+
+def paged_prefill_impl() -> str:
+    """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
+
+    Mirrors ``paged_attention_impl`` for multi-token spans: 'pallas' runs
+    the paged flash-prefill kernels (block-table index maps, no padded-view
+    gather; Pallas on TPU / interpret under JAX_PALLAS_INTERPRET=1 / the
+    O(live) XLA twin elsewhere), 'ref' restores the ``paged_view`` gather.
+    ``REPRO_PAGED_PREFILL_IMPL`` overrides; it falls back to
+    ``REPRO_PAGED_ATTN_IMPL`` so one env flips the whole engine step.
+    """
+    return os.environ.get("REPRO_PAGED_PREFILL_IMPL",
+                          os.environ.get("REPRO_PAGED_ATTN_IMPL", "pallas"))

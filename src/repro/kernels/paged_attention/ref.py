@@ -1,11 +1,13 @@
-"""Gather-path oracles for the paged-attention decode kernels.
+"""Gather-path oracles for the paged-attention kernels (decode + prefill).
 
 These are the EXACT pre-kernel implementations (materialize the padded
 per-sequence view with ``paged_view``, then run the dense/absorbed/indexer
 math over it), kept verbatim so ``impl="ref"`` reproduces the old engine
-byte-for-byte and parity is testable on any backend.  The prefill path
-still uses this gather (a whole span amortizes the copy); only the decode
-hot loop switched to in-place block reads.
+byte-for-byte and parity is testable on any backend.  The ``*_prefill_*``
+oracles are the span-query twins: queries at per-sequence start offsets
+attend the gathered view under the plain causal-by-absolute-position mask
+(view index == position), which is what ``prefill.py`` replaces with
+in-place block reads.
 """
 from __future__ import annotations
 
@@ -54,6 +56,69 @@ def paged_mla_reference(q_lat: jax.Array, q_rope: jax.Array,
     scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bsht,btl->bshl", probs, c_view.astype(jnp.float32))
+
+
+def paged_gqa_prefill_reference(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_tables: jax.Array,
+                                starts: jax.Array, *, window: int = 0,
+                                softcap: float = 0.0) -> jax.Array:
+    """Span prefill over the gathered view: q (B, S, H, d), starts (B,)
+    -> (B, S, H, d).  Query i of row b sits at position starts[b] + i."""
+    B, S = q.shape[:2]
+    k_full = paged_view(k_pool, block_tables)
+    v_full = paged_view(v_pool, block_tables)
+    T = k_full.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_positions = starts[:, None] + jnp.arange(S)[None]
+    return dense_attention(q, k_full, v_full, q_positions, kv_positions,
+                           causal=True, window=window, softcap=softcap,
+                           q_chunk=0)
+
+
+def paged_mla_prefill_reference(q_lat: jax.Array, q_rope: jax.Array,
+                                c_pool: jax.Array, kr_pool: jax.Array,
+                                block_tables: jax.Array, starts: jax.Array,
+                                *, scale: float) -> jax.Array:
+    """Absorbed MQA span scores/PV over the gathered latent view.
+
+    q_lat (B, S, H, lora); q_rope (B, S, H, rope); starts (B,) -> out_lat
+    (B, S, H, lora) fp32 — einsum-for-einsum the ``probs · c`` term of
+    ``repro.core.mla._absorbed_attend`` under the span's causal mask.
+    """
+    B, S = q_lat.shape[:2]
+    c_view = paged_view(c_pool, block_tables)            # (B, T, lora)
+    kr_view = paged_view(kr_pool, block_tables)
+    T = c_view.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_pos = starts[:, None] + jnp.arange(S)[None]
+    scores = (jnp.einsum("bshl,btl->bsht", q_lat.astype(jnp.float32),
+                         c_view.astype(jnp.float32))
+              + jnp.einsum("bshr,btr->bsht", q_rope.astype(jnp.float32),
+                           kr_view.astype(jnp.float32)))
+    scores = scores * scale
+    mask = kv_pos[:, None, :] <= q_pos[:, :, None]           # (B, S, T)
+    scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bsht,btl->bshl", probs, c_view.astype(jnp.float32))
+
+
+def paged_indexer_prefill_reference(q_idx: jax.Array, w_head: jax.Array,
+                                    k_pool: jax.Array,
+                                    block_tables: jax.Array,
+                                    starts: jax.Array) -> jax.Array:
+    """Span indexer scores over the gathered k_idx view (B, S, mb*bs) fp32.
+
+    Same contraction as ``repro.core.dsa.indexer_scores`` on the view;
+    ``starts`` is unused (the selector masks by position) but kept for
+    signature parity with the in-place impls.
+    """
+    del starts
+    Di = q_idx.shape[-1]
+    k_view = paged_view(k_pool, block_tables)            # (B, T, Di)
+    dots = jnp.einsum("bshd,btd->bsht", q_idx.astype(jnp.float32),
+                      k_view.astype(jnp.float32))
+    dots = jax.nn.relu(dots) * (Di ** -0.5)
+    return jnp.einsum("bsht,bsh->bst", dots, w_head.astype(jnp.float32))
 
 
 def paged_indexer_reference(q_idx: jax.Array, w_head: jax.Array,

@@ -113,6 +113,46 @@ def hidden(params, tokens: jax.Array, cfg: ModelConfig, *,
     ssm_g = jax.tree.map(lambda x: x.reshape((G, E) + x.shape[1:]),
                          cache["ssm"])
     from repro.flags import scan_unroll
+    if block_tables is not None:
+        # paged serving: the shared-attention KV is a LAYER-MAJOR flat pool
+        # (G*stride, bs, *f) carried as a scan-invariant — group g
+        # addresses its segment with block_tables + g*stride, and the carry
+        # is updated in place (stacked xs/ys would copy the whole pool
+        # every step; see models.transformer._scan_groups)
+        kv_pool = cache["kv"]
+        stride = jax.tree.leaves(kv_pool)[0].shape[0] // G
+
+        def group_paged(carry, xs):
+            h_carry, kv = carry
+            gp, g_ssm, g = xs
+
+            def mamba_body(hc, ys):
+                one_p, one_st = ys
+                x = rmsnorm(one_p, hc, cfg.norm_eps, "norm")
+                y, new_st = apply_mamba2(one_p["mamba"], x, cfg,
+                                         state=one_st)
+                return constrain_batch(hc + y, mesh), new_st
+
+            h_carry, new_ssm = jax.lax.scan(mamba_body, h_carry,
+                                            (gp, g_ssm),
+                                            unroll=scan_unroll())
+            h_carry, new_kv, _ = tfm.apply_block(
+                params["shared_attn"], h_carry, cfg, positions, "global",
+                moe=False, sparse=sparse, mesh=mesh, cache=kv,
+                cache_index=cache_index,
+                block_tables=block_tables + g * stride,
+                paged_impl=paged_impl)
+            return (h_carry, new_kv), new_ssm
+
+        (h, kv_pool), new_ssm = jax.lax.scan(
+            group_paged, (h, kv_pool),
+            (lp_g, ssm_g, jnp.arange(G, dtype=jnp.int32)),
+            unroll=scan_unroll())
+        new_cache = {"ssm": jax.tree.map(
+            lambda x: x.reshape((G * E,) + x.shape[2:]), new_ssm),
+            "kv": kv_pool}
+        h = rmsnorm(params, h, cfg.norm_eps, "final_norm")
+        return h, jnp.zeros((), jnp.float32), new_cache
     h, (new_ssm, new_kv) = jax.lax.scan(group, h, (lp_g, ssm_g, cache["kv"]),
                                         unroll=scan_unroll())
     new_cache = {"ssm": jax.tree.map(
@@ -167,19 +207,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype=jnp.float32, abstract: bool = False, *,
                      batch: int) -> Tuple[dict, dict]:
-    """Paged variant: the shared-attention KV becomes a block pool
-    (num_blocks, block_size, ...) while the mamba2 recurrent states remain
-    per-slot (``batch`` = number of scheduler slots) — a new sequence must
-    have its slot's ssm state reset on admission."""
-    from repro.utils import stack_tree
+    """Paged variant: the shared-attention KV becomes a LAYER-MAJOR flat
+    block pool ``(G*num_blocks, block_size, ...)`` (invocation g of the
+    shared block owns rows ``[g*num_blocks, (g+1)*num_blocks)``; see
+    ``models.transformer.init_paged_cache``) while the mamba2 recurrent
+    states remain per-slot (``batch`` = number of scheduler slots) — a new
+    sequence must have its slot's ssm state reset on admission."""
     G = _n_groups(cfg)
     ssm = _stacked_ssm_state(cfg, batch, dtype)
     if abstract:
         ssm = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                            ssm)
-    kv_one = tfm._layer_cache(cfg, num_blocks, block_size, "global", dtype,
-                              abstract)
-    kv = stack_tree(kv_one, G, abstract)
+    kv = tfm._layer_cache(cfg, G * num_blocks, block_size, "global", dtype,
+                          abstract)
     return {"ssm": ssm, "kv": kv}, {}
 
 

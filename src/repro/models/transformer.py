@@ -70,11 +70,14 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
     With ``block_tables`` (B, max_blocks) the cache leaves are PAGED block
     pools (num_blocks, block_size, ...): new tokens are scattered through
     the table at ``positions``.  Single-token steps (the decode hot loop)
-    then read KV blocks IN PLACE through the paged-attention kernels
-    (``paged_impl`` selects kernel vs gather oracle); multi-token spans
-    (prefill) attend over the gathered per-sequence view, whose index
-    equals absolute position — so the plain causal mask covers garbage
-    beyond each sequence's length."""
+    read KV blocks IN PLACE through the paged-attention decode kernels;
+    multi-token spans (chunked/suffix prefill) read them in place through
+    the paged flash-PREFILL kernels, whose masks come from the spans'
+    absolute positions (causal within the span, full attention to the
+    cached prefix).  ``paged_impl`` selects kernel vs gather oracle for
+    both phases; ``impl='ref'`` restores the gathered per-sequence view,
+    whose index equals absolute position — the plain causal mask then
+    covers garbage beyond each sequence's length."""
     zero = jnp.zeros((), jnp.float32)
     B, S, D = h.shape
     window = cfg.sliding_window if kind == "local" else 0
@@ -148,7 +151,32 @@ def _attend(params, h: jax.Array, cfg: ModelConfig, positions: jax.Array,
                     window=window, softcap=cfg.attn_logit_softcap,
                     impl=paged_impl)
             return out.reshape(B, S, -1) @ ap["wo"], new_cache, zero
-        k_full = paged_view(k_pool, block_tables)     # prefill span: gather
+        from repro.kernels.paged_attention.ops import resolve_prefill_impl
+        if resolve_prefill_impl(paged_impl) != "ref" and not (
+                use_dsa and cfg.dsa.selector == "block"):
+            # prefill span: walk the block table in place — no padded-view
+            # gather; span masking comes from the absolute positions alone
+            # (the block-granular DSA selector keeps the gather: its pooled
+            # block top-k has no in-place span variant yet)
+            if use_dsa:
+                ki_pool = paged_update(
+                    cache["k_idx"],
+                    dsa_mod.indexer_keys(params["idx"], h, cfg.dsa),
+                    block_tables, positions)
+                new_cache["k_idx"] = ki_pool
+                out = dsa_mod.dsa_prefill_paged(
+                    params["idx"], q, k_pool, v_pool, h, ki_pool,
+                    block_tables, positions, cfg, window=window,
+                    softcap=cfg.attn_logit_softcap, impl=paged_impl)
+            else:
+                from repro.kernels.paged_attention.ops import \
+                    paged_gqa_prefill
+                out = paged_gqa_prefill(
+                    q, k_pool, v_pool, block_tables, positions[:, 0],
+                    window=window, softcap=cfg.attn_logit_softcap,
+                    impl=paged_impl)
+            return out.reshape(B, S, -1) @ ap["wo"], new_cache, zero
+        k_full = paged_view(k_pool, block_tables)   # impl='ref': gather
         v_full = paged_view(v_pool, block_tables)
         T = k_full.shape[1]
         kv_positions = jnp.broadcast_to(jnp.arange(T), (B, T))
@@ -264,9 +292,20 @@ def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
 def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
                  caches: Optional[dict], cache_index, block_tables=None,
                  paged_impl=None):
-    """Scan over layer groups; caches is {'slotJ': stacked_cache} or None.
+    """Scan over layer groups; caches is {'slotJ': cache} or None.
 
-    Without caches (training) the scan body covers ``remat_group``
+    Paged serving (``block_tables`` set): each slot's cache is a
+    LAYER-MAJOR flat block pool ``(n_groups*stride, bs, *f)`` that rides
+    the scan as a CARRY — group ``g`` addresses its segment with
+    ``block_tables + g*stride``.  Scan outputs cannot alias inputs, so the
+    old layout (stacked pools as xs/ys) round-tripped the ENTIRE pool
+    through HBM every step; a carried pool is aliased in place by XLA's
+    while-loop buffer assignment, so a decode step writes only the touched
+    blocks (tested by the donated-buffer regression in
+    tests/test_paged_prefill.py).
+
+    Contiguous serving caches (no block tables) keep the stacked xs/ys
+    scan.  Without caches (training) the scan body covers ``remat_group``
     consecutive pattern-groups under ONE jax.checkpoint: the activation tape
     holds h every remat_group·P layers (paper §2.4.1's offloading analogue —
     trade recompute for tape size).
@@ -277,7 +316,7 @@ def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
     slot_params = tuple(params[f"slot{j}"] for j in range(P))
     n_groups = jax.tree.leaves(slot_params[0])[0].shape[0]
 
-    def one_group(h, aux, group_params, group_caches):
+    def one_group(h, aux, group_params, group_caches, tables):
         new_caches = []
         for j, kind in enumerate(pattern):
             c_j = group_caches[j] if group_caches is not None else None
@@ -285,20 +324,37 @@ def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
                                       positions=positions, kind=kind,
                                       moe=moe, sparse=sparse, mesh=mesh,
                                       cache=c_j, cache_index=cache_index,
-                                      block_tables=block_tables,
+                                      block_tables=tables,
                                       paged_impl=paged_impl)
             new_caches.append(c_new)
             aux = aux + a
         return h, aux, new_caches
 
+    from repro.flags import scan_unroll
+    if caches is not None and block_tables is not None:
+        slot_pools = tuple(caches[f"slot{j}"] for j in range(P))
+        stride = jax.tree.leaves(slot_pools[0])[0].shape[0] // n_groups
+
+        def body(carry, xs):
+            h, aux, pools = carry
+            gp, g = xs
+            h, aux, pools = one_group(h, aux, gp, pools,
+                                      block_tables + g * stride)
+            return (h, aux, tuple(pools)), None
+
+        (h, aux, slot_pools), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32), slot_pools),
+            (slot_params, jnp.arange(n_groups, dtype=jnp.int32)),
+            unroll=scan_unroll())
+        return h, aux, {f"slot{j}": slot_pools[j] for j in range(P)}
+
     if caches is not None:
         def body(carry, xs):
             h, aux = carry
             gp, gc = xs
-            h, aux, new_caches = one_group(h, aux, gp, gc)
+            h, aux, new_caches = one_group(h, aux, gp, gc, block_tables)
             return (h, aux), tuple(new_caches)
 
-        from repro.flags import scan_unroll
         slot_caches = tuple(caches[f"slot{j}"] for j in range(P))
         (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
                                     (slot_params, slot_caches),
@@ -316,7 +372,7 @@ def _scan_groups(params, h, cfg: ModelConfig, positions, *, sparse, mesh,
     def super_body_inner(gp_super, h, aux):
         for i in range(R):
             gp = jax.tree.map(lambda x: x[i], gp_super)
-            h, aux, _ = one_group(h, aux, gp, None)
+            h, aux, _ = one_group(h, aux, gp, None, block_tables)
         return h, aux
 
     fn = super_body_inner
@@ -495,11 +551,30 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      ) -> Tuple[dict, dict]:
     """Block-pool KV cache for continuous batching (see repro.core.paging).
 
-    Identical pytree to ``init_cache`` with the batch axis reinterpreted as
-    the block axis and max_len as the block size: every leaf is
-    (layers?, num_blocks, block_size, ...).  Sequences address the pool via
-    (B, max_blocks) block tables passed to ``prefill``/``decode_step``."""
-    return init_cache(cfg, num_blocks, block_size, dtype, abstract)
+    ``dense_i`` entries are flat per-layer pools ``(num_blocks, bs, *f)``;
+    scanned ``slotJ`` entries are LAYER-MAJOR flat pools
+    ``(n_groups*num_blocks, bs, *f)`` — layer-group ``g`` owns block rows
+    ``[g*num_blocks, (g+1)*num_blocks)`` and is addressed with
+    ``block_tables + g*num_blocks`` inside the layer scan, which carries
+    the pool as a scan-invariant instead of round-tripping stacked xs/ys
+    (scan outputs cannot alias inputs).  Callers keep passing PER-LAYER
+    block ids in ``[0, num_blocks)``; the offsets are internal.  Sequences
+    address the pool via (B, max_blocks) block tables passed to
+    ``prefill``/``decode_step``."""
+    pattern = cfg.attention_pattern
+    P = len(pattern)
+    n_groups = (cfg.num_layers - cfg.first_k_dense) // P
+    cache, specs = {}, {}
+    for i in range(cfg.first_k_dense):
+        cache[f"dense_{i}"] = _layer_cache(cfg, num_blocks, block_size,
+                                           "global", dtype, abstract)
+        specs[f"dense_{i}"] = cache_specs(cfg, "global")
+    for j, kind in enumerate(pattern):
+        cache[f"slot{j}"] = _layer_cache(cfg, n_groups * num_blocks,
+                                         block_size, kind, dtype, abstract)
+        # block axis folds (layers, blocks); specs stay per-leaf flat
+        specs[f"slot{j}"] = cache_specs(cfg, kind)
+    return cache, specs
 
 
 def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,

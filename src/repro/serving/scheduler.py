@@ -11,19 +11,21 @@ keeps ``max_batch`` decode *slots* and, every step,
      soon as a slot AND enough blocks for its whole lifetime
      (``ceil((prompt + max_new) / block_size)``) are available, so it can
      never run out of cache mid-flight;
-  3. advances chunked prefills (one block-aligned chunk per slot per
-     step), so one huge prompt cannot stall the decode batch
+  3. advances chunked prefills (one chunk per slot per step), so one huge
+     prompt cannot stall the decode batch
      (the §3.6.2 prefill/decode interference, engine-side);
   4. runs ONE batched decode step for every decoding sequence, each at
      its own position (``models/*.decode_step(..., block_tables=...)``).
-     The decode step reads KV blocks IN PLACE through the paged-attention
-     kernels (``repro.kernels.paged_attention``) — O(live tokens) HBM
-     traffic instead of the old full-view ``paged_view`` gather, which
-     copied B × max_blocks × block_size tokens per step regardless of
-     occupancy.  ``attn_impl="ref"`` restores the gather (the parity
-     oracle); ``stats["gather_bytes_saved"]`` tracks the traffic the
-     in-place path avoided.  Prefill spans still gather: a whole span
-     amortizes the copy.
+     BOTH phases read KV blocks IN PLACE through the paged-attention
+     kernels (``repro.kernels.paged_attention``) — the decode step via the
+     flash-decode kernels, prefill spans via the flash-PREFILL kernels
+     whose index maps walk the block table at per-sequence start offsets.
+     That is O(live tokens) HBM traffic instead of the old full-view
+     ``paged_view`` gather, which copied B × max_blocks × block_size
+     tokens per call regardless of occupancy.  ``attn_impl="ref"``
+     restores the gather for both phases (the parity oracle);
+     ``stats["gather_bytes_saved"]`` / ``stats["prefill_gather_bytes_
+     saved"]`` track the traffic the in-place paths avoided.
 
 Prefix reuse (``prefix_cache=True``, attention-cache families): on admit
 the engine asks the radix cache (``repro.serving.prefix_cache``) for the
@@ -44,13 +46,16 @@ slot, and decode steps restore it for slots still prefilling.  Recurrent
 state cannot be recovered from KV blocks, so the prefix cache is
 force-disabled for hybrid.
 
-Device layout: one block pool (``init_paged_cache``) shared by all slots; a
-(max_batch, max_blocks) block table; a (max_batch,) length vector.  Idle
-slots point at a reserved trash block with length 0, so the decode step has
-a fixed shape (one compilation) regardless of occupancy.  Prompt suffixes
-are right-padded to a whole number of blocks, which buckets prefill
-compilations by ``block_size`` and keeps padded garbage behind the causal
-mask until real tokens overwrite it.
+Device layout: one block pool (``init_paged_cache``, LAYER-MAJOR flat —
+scanned layers carry it through the layer scan as a scan-invariant and
+update it in place, instead of round-tripping stacked xs/ys pools through
+HBM every step) shared by all slots; a (max_batch, max_blocks) block
+table; a (max_batch,) length vector.  Idle slots point at a reserved trash
+block with length 0, so the decode step has a fixed shape (one
+compilation) regardless of occupancy.  Prompt suffixes are EXACT spans —
+the kernels mask by start offset / sequence length, so the old
+right-pad-to-whole-blocks trick (padded garbage hidden behind the causal
+mask) is gone.
 """
 from __future__ import annotations
 
@@ -137,20 +142,34 @@ class ContinuousEngine:
                       "decode_tokens": 0, "admit_steps": [],
                       "prefill_tokens": 0, "cached_tokens": 0,
                       "cow_forks": 0, "chunk_steps": 0,
-                      "gather_bytes_saved": 0}
-        # 'pallas' reads KV blocks in place during decode; 'ref' restores
-        # the full-view gather (byte-identical greedy — the parity oracle)
-        from repro.kernels.paged_attention.ops import resolve_impl
+                      "gather_bytes_saved": 0,
+                      "prefill_gather_bytes_saved": 0}
+        # 'pallas' reads KV blocks in place (decode kernels at S==1, the
+        # flash-prefill kernels on spans); 'ref' restores the full-view
+        # gather for both phases (byte-identical greedy — the parity
+        # oracle).  attn_impl covers BOTH; with attn_impl=None each phase
+        # falls back to its own env default (repro.flags).
+        from repro.kernels.paged_attention.ops import (resolve_impl,
+                                                       resolve_prefill_impl)
         self.attn_impl = attn_impl
         self._impl_eff = resolve_impl(attn_impl)
         self._in_place = self._impl_eff != "ref"
+        # the block-granular DSA selector has no in-place span variant:
+        # its prefill falls back to the gather (models.transformer._attend).
+        # NOTE: that dispatch is per layer (only sparse 'global' GQA layers
+        # fall back), so for block-selector configs this engine-level flag
+        # — and the bytes-saved stat it gates — is an approximation, like
+        # the decode counter's batch-max accounting for the blocked twin.
+        self._prefill_in_place = resolve_prefill_impl(attn_impl) != "ref" \
+            and not (cfg.dsa is not None and cfg.dsa.selector == "block"
+                     and cfg.attention_type != "mla")
         self._token_bytes = self._pool_token_bytes()
         # donate the pool through the hot jits: paged_update then scatters
         # into the live buffer instead of copying the whole pool every step
-        # (hybrid decode keeps the copy — _ssm_restore must read the
-        # pre-step recurrent state, which donation would invalidate)
-        self._decode = jax.jit(self._decode_fn,
-                               donate_argnums=() if self.hybrid else (2,))
+        # (hybrid decode donates only the KV pool — _ssm_restore must read
+        # the pre-step recurrent state, which donation would invalidate)
+        self._decode = jax.jit(self._hybrid_decode_fn if self.hybrid
+                               else self._decode_fn, donate_argnums=(2,))
         self._prefill = jax.jit(self._hybrid_prefill_fn if self.hybrid
                                 else self._prefill_fn, donate_argnums=(2,))
         # donating the pool makes the COW fork a single-block in-place
@@ -163,6 +182,14 @@ class ContinuousEngine:
     # ------------------------------------------------------------------ jit
     def _decode_fn(self, params, tok, pool, tables, lengths):
         return self.model.decode_step(params, tok, self.cfg, pool, lengths,
+                                      block_tables=tables,
+                                      paged_impl=self.attn_impl)
+
+    def _hybrid_decode_fn(self, params, tok, kv, ssm, tables, lengths):
+        # kv rides in the DONATED slot (argnums 2); ssm stays undonated so
+        # the pre-step recurrent state survives for _ssm_restore
+        return self.model.decode_step(params, tok, self.cfg,
+                                      {"ssm": ssm, "kv": kv}, lengths,
                                       block_tables=tables,
                                       paged_impl=self.attn_impl)
 
@@ -190,34 +217,34 @@ class ContinuousEngine:
     def _cow_fn(self, pool, src, dst):
         """Copy block ``src`` -> ``dst`` across every KV leaf (COW fork).
 
-        Jitted with the pool DONATED, so each leaf update is an in-place
-        single-block ``copy_block`` — a fork moves one block, not the
-        pool."""
-        from repro.core.paging import copy_block
+        Every leaf is a (layer-major) flat pool with ``num_blocks + 1``
+        rows per layer, so the copy is one ``copy_block_strided`` per leaf.
+        Jitted with the pool DONATED, so each update is in place — a fork
+        moves L·block_size rows, not the pool."""
+        from repro.core.paging import copy_block_strided
+        stride = self.kv.num_blocks + 1
         out = {}
         for k, v in pool.items():
             if k == "ssm":
                 out[k] = v                       # recurrent state: per-slot
-            elif k == "kv" or k.startswith("slot"):
-                out[k] = jax.tree.map(            # (layers, nb, bs, ...)
-                    lambda x: copy_block(x, src, dst, axis=1), v)
             else:
-                out[k] = jax.tree.map(            # dense_*: (nb, bs, ...)
-                    lambda x: copy_block(x, src, dst, axis=0), v)
+                out[k] = jax.tree.map(
+                    lambda x: copy_block_strided(x, src, dst, stride), v)
         return out
 
     def _pool_token_bytes(self) -> int:
         """Bytes of KV state per token position, summed over layers/leaves
-        (recurrent ssm state excluded — it is per-slot, never gathered)."""
+        (recurrent ssm state excluded — it is per-slot, never gathered).
+        Every non-ssm leaf is (L*stride, bs, *f) with stride = per-layer
+        block count."""
+        stride = self.kv.num_blocks + 1
         tot = 0
         for k, v in self.pool.items():
             if k == "ssm":
                 continue
-            stacked = k == "kv" or k.startswith("slot")
             for leaf in jax.tree.leaves(v):
-                feat = leaf.shape[3:] if stacked else leaf.shape[2:]
-                layers = leaf.shape[0] if stacked else 1
-                tot += layers * int(np.prod(feat, dtype=np.int64)) \
+                layers = leaf.shape[0] // stride
+                tot += layers * int(np.prod(leaf.shape[2:], dtype=np.int64)) \
                     * leaf.dtype.itemsize
         return tot
 
@@ -226,11 +253,14 @@ class ContinuousEngine:
             lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])),
             pool["ssm"]))
 
-    def _ssm_restore_fn(self, pool, old_ssm, mask):
+    def _ssm_restore_fn(self, ssm, old_ssm, mask):
+        # ONLY the ssm subtree passes through this (non-donating) jit —
+        # threading the whole pool would copy the untouched KV leaves
+        # input-to-output and undo the decode donation
         def mix(new, old):
             m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
             return jnp.where(m, old, new)
-        return dict(pool, ssm=jax.tree.map(mix, pool["ssm"], old_ssm))
+        return jax.tree.map(mix, ssm, old_ssm)
 
     # ------------------------------------------------------------ scheduler
     def submit(self, req: Request) -> None:
@@ -314,16 +344,10 @@ class ContinuousEngine:
         plen = len(req.prompt)
         m, mblocks = (self.prefix.match(req.prompt, limit=plen - 1)
                       if self.prefix is not None else (0, []))
-
-        def plan(m):
-            s_pad = min(blocks_for(plen - m, bs) * bs,
-                        self.max_blocks * bs - m)
-            total = max(blocks_for(plen + req.max_new, bs),
-                        blocks_for(m + s_pad, bs))
-            return s_pad, total
-
         n_full, partial = m // bs, m % bs
-        s_pad, total = plan(m)
+        # blocks for the request's whole lifetime (suffix spans are exact,
+        # so nothing beyond prompt+max_new is ever written)
+        total = blocks_for(plen + req.max_new, bs)
         # aliased full blocks cover table slots [0, n_full); fresh blocks
         # cover the rest — on a partial match fresh[0] is the COW fork
         # destination replacing the partially-matched source block
@@ -336,7 +360,6 @@ class ContinuousEngine:
             if mblocks:
                 self.kv.release(mblocks)
                 m, mblocks, n_full, partial = 0, [], 0, 0
-                s_pad, total = plan(0)
                 try:
                     fresh = self.kv.alloc(total)
                 except CacheFull:
@@ -369,7 +392,7 @@ class ContinuousEngine:
         self.stats["prefill_tokens"] += plen - m
         self.stats["admit_steps"].append(self.stats["steps"])
         if self.prefill_chunk is None:
-            self._prefill_span(slot, s, span=s_pad)   # whole suffix at once
+            self._prefill_span(slot, s, span=plen - m)  # whole suffix
         return True
 
     def _admit_stalled(self) -> bool:
@@ -382,28 +405,34 @@ class ContinuousEngine:
     # ---------------------------------------------------------- prefill
     def _prefill_span(self, slot: int, s: _Active, span: int) -> None:
         """Prefill ``span`` token positions starting at ``s.pos``; samples
-        the first token and installs the decode view on the final span."""
+        the first token and installs the decode view on the final span.
+
+        Spans are EXACT (no right-padding to whole blocks): the in-place
+        kernels mask by the span's start offset and the gather oracle by
+        the causal mask, so padded garbage would be dead weight — and the
+        recurrent hybrid family could never pad anyway (pad garbage would
+        advance the mamba2 state)."""
         bs = self.block_size
         prompt, plen = s.req.prompt, len(s.req.prompt)
         start = s.pos
-        span = min(span, self.max_blocks * bs - start)
         real = min(plen - start, span)
-        if self.hybrid:
-            # a recurrent scan has no causal mask to hide right-padding:
-            # pad garbage would advance the mamba2 state, so hybrid spans
-            # are exact (one compile per distinct span length)
-            span = real
-        toks = np.zeros((1, span), np.int32)
-        toks[0, :real] = prompt[start:start + real]
+        assert real > 0 and start + real <= self.max_blocks * bs
+        toks = np.asarray(prompt[start:start + real], np.int32)[None]
         row = s.row[None]
         args = [self.params, jnp.asarray(toks), self.pool,
                 jnp.asarray(row), jnp.asarray([start], jnp.int32)]
         if self.hybrid:
             args.append(jnp.asarray(slot, jnp.int32))
         logits, self.pool = self._prefill(*args)
+        if self._prefill_in_place:
+            # traffic the in-place span avoided vs the old padded-view
+            # gather (1 × max_blocks × block_size tokens per span call)
+            live = ((start + real - 1) // bs + 1) * bs
+            self.stats["prefill_gather_bytes_saved"] += \
+                (self.max_blocks * bs - live) * self._token_bytes
         s.pos = start + real
         if s.pos >= plen:                       # final span: sample token 1
-            lg = np.asarray(logits[0, plen - 1 - start], np.float32)
+            lg = np.asarray(logits[0, real - 1], np.float32)
             s.pending, s.pending_lp = self._sample(lg, s.req.temperature)
             self.tables[slot] = s.row
             self.lengths[slot] = plen
@@ -432,16 +461,22 @@ class ContinuousEngine:
         tok = np.zeros((self.max_batch, 1), np.int32)
         for i in active:
             tok[i, 0] = self.slots[i].pending
-        logits, self.pool = self._decode(
-            self.params, jnp.asarray(tok), self.pool,
-            jnp.asarray(self.tables), jnp.asarray(self.lengths))
+        if self.hybrid:
+            logits, self.pool = self._decode(
+                self.params, jnp.asarray(tok), self.pool["kv"],
+                self.pool["ssm"], jnp.asarray(self.tables),
+                jnp.asarray(self.lengths))
+        else:
+            logits, self.pool = self._decode(
+                self.params, jnp.asarray(tok), self.pool,
+                jnp.asarray(self.tables), jnp.asarray(self.lengths))
         if old_ssm is not None:
             # a decode step must not advance the recurrent state of slots
             # whose prompt is still mid-chunked-prefill
             mask = np.zeros((self.max_batch,), bool)
             mask[prefilling] = True
-            self.pool = self._ssm_restore(self.pool, old_ssm,
-                                          jnp.asarray(mask))
+            self.pool = dict(self.pool, ssm=self._ssm_restore(
+                self.pool["ssm"], old_ssm, jnp.asarray(mask)))
         if self._in_place:
             # HBM traffic the in-place decode avoided vs the old full-view
             # gather, which always moved max_batch*max_blocks*block_size

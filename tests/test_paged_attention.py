@@ -258,6 +258,9 @@ def test_engine_greedy_byte_parity_gather_vs_inplace(family):
         np.testing.assert_array_equal(a, b)
     assert e_pal.stats["gather_bytes_saved"] > 0
     assert e_ref.stats["gather_bytes_saved"] == 0
+    # attn_impl covers prefill too: spans read blocks in place as well
+    assert e_pal.stats["prefill_gather_bytes_saved"] > 0
+    assert e_ref.stats["prefill_gather_bytes_saved"] == 0
 
 
 def test_decode_compiles_once_across_admit_retire():

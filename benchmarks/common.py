@@ -18,11 +18,16 @@ def train_lm(cfg: ModelConfig, *, steps: int = 60, batch: int = 4,
              seq: int = 128, lr: float = 2e-3, seed: int = 0,
              muon_split: bool = True, sparse=None,
              data_seed: int = 0, init_params=None,
-             freeze: Optional[str] = None) -> Dict:
+             freeze: Optional[str] = None, branching: int = 8,
+             stream_seed: Optional[int] = None) -> Dict:
     """Train on the Markov corpus; returns params + loss history.
 
     ``freeze``: 'all_but_indexer' implements the DSA warm-up stage
-    (§2.1.1: indexer-only training, base frozen).
+    (§2.1.1: indexer-only training, base frozen).  ``branching`` /
+    ``stream_seed`` forward to ``markov_stream`` (low branching =
+    low-entropy corpus; a varied stream_seed draws FRESH samples of the
+    same ``data_seed`` language — resumed-training bursts need it or every
+    burst replays the first batches).
     """
     model = get_model(cfg)
     if init_params is None:
@@ -31,7 +36,8 @@ def train_lm(cfg: ModelConfig, *, steps: int = 60, batch: int = 4,
         params = init_params
         _, specs = model.init(jax.random.key(seed), cfg, abstract=True)
     state = muon.init(params)
-    stream = markov_stream(cfg.vocab_size, seq, batch, seed=data_seed)
+    stream = markov_stream(cfg.vocab_size, seq, batch, seed=data_seed,
+                           branching=branching, stream_seed=stream_seed)
 
     def is_idx_path(path):
         return any(getattr(p, "key", None) == "idx" for p in path)

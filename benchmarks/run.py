@@ -22,6 +22,7 @@ SUITES = [
     ("prefix_cache", "S3.6: radix prefix cache on agentic workloads"),
     ("paged_decode", "S3.6: in-place paged decode vs full-view gather"),
     ("paged_prefill", "S3.6: in-place paged prefill vs padded-view gather"),
+    ("speculative_decode", "S2.1/S3.6: MTP spec decode through the engine"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

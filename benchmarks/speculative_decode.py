@@ -1,0 +1,143 @@
+"""MTP speculative decode through the paged engine (GLM-5 §2.1 + §3.6).
+
+GLM-5 ships its shared-parameter MTP head so SERVING can speculate: the
+paper reports 2.76 accepted tokens per verification at 4 speculative steps
+(Table 2), which multiplies decode throughput — each scheduler step emits
+``accept_length`` tokens for roughly the cost of one.  This suite measures
+that end to end through ``ContinuousEngine(spec_steps=...)``:
+
+  * a tiny MTP model is trained on the DETERMINISTIC-chain Markov corpus
+    (``branching=1`` — the fully-predictable-continuation limit of the
+    agentic/code traffic speculation targets; accept length is MEASURED,
+    not assumed, and model quality is what produces it);
+  * the same decode-heavy workload is served with speculation off (one
+    batched decode step per scheduler step) and on (draft ``spec_steps``
+    tokens per slot with the MTP head, verify them as ONE batched span
+    through the paged flash-prefill kernels, roll back rejects), with the
+    serves INTERLEAVED and best-of-N timed so machine drift cancels;
+  * greedy outputs are asserted byte-identical spec-on vs spec-off.
+
+Note the toy distortion this config works around: drafting costs
+``spec_steps`` sequential MTP-block passes, which against a 2-layer trunk
+would be ~2 extra forwards per round (against GLM-5's ~90-layer trunk the
+head is ~1% — drafting is nearly free).  The 6-layer trunk here keeps the
+draft a sub-step fraction so the measured speedup reflects the engine
+mechanics rather than the 2-layer artifact.
+
+Acceptance bar (ENFORCED — the run raises if missed, failing
+``make bench-smoke``): >= 1.2x decode wall-clock speedup at the measured
+accept length.  Off-TPU both engines run the O(live) XLA twins, so the
+ratio is measured for real on CPU too.
+
+  PYTHONPATH=src python -m benchmarks.speculative_decode
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import MTPConfig, ModelConfig
+from repro.data.synthetic import markov_stream
+from repro.serving import ContinuousEngine, Request
+
+from benchmarks.common import train_lm
+
+BAR = 1.2
+SPEC = 4            # Table 2 measures accept length at 4 speculative steps
+BRANCHING = 1       # deterministic chain: the speculation-friendly limit
+LOSS_TARGET = 0.05  # train until the chain is LEARNED (branching=1 has a
+                    # ~0 entropy floor; accept length tracks model quality,
+                    # and the 1.2x bar needs accept ~3+ at ~2.5x round cost)
+
+
+def _cfg() -> ModelConfig:
+    # 6 trunk layers so the 1-layer MTP head's draft chain is a sub-step
+    # fraction of a decode step (see module docstring)
+    return ModelConfig(name="spec-mini", num_layers=6, d_model=256,
+                       num_heads=4, num_kv_heads=4, head_dim=64, d_ff=1024,
+                       vocab_size=256, q_chunk=0, loss_chunk=0,
+                       mtp=MTPConfig(num_predict=3, share_params=True))
+
+
+def _train(cfg: ModelConfig, max_steps: int) -> Dict:
+    """8-step bursts until LOSS_TARGET (speculation needs a model that has
+    actually learned the chain; a fixed tiny budget is seed-flaky).
+    Each burst advances ``stream_seed`` so it trains on FRESH samples of
+    the same language instead of replaying the first 8 batches (optimizer
+    momentum does restart per burst — fine at this scale)."""
+    params, done = None, 0
+    while True:
+        out = train_lm(cfg, steps=8, branching=BRANCHING,
+                       init_params=params, stream_seed=1 + done)
+        params, done = out["params"], done + 8
+        if out["final_loss"] < LOSS_TARGET or done >= max_steps:
+            return {"params": params, "final_loss": out["final_loss"],
+                    "steps": done}
+
+
+def run(fast: bool = False, **kw) -> List[Dict]:
+    cfg = _cfg()
+    trained = _train(cfg, max_steps=48 if fast else 80)
+    params = trained["params"]
+    # in-distribution prompts: continuations of the trained language
+    arr = next(markov_stream(cfg.vocab_size, 16, 8, seed=0,
+                             stream_seed=4242, branching=BRANCHING))
+    prompts = [arr[i, :16].astype(np.int32) for i in range(8)]
+    max_new = 64 if fast else 96
+    reps = 3        # min-of-3 interleaved serves: CI timer hygiene
+
+    engines = {}
+    for spec in (0, SPEC):
+        eng = ContinuousEngine(cfg, params, max_batch=4, block_size=16,
+                               num_blocks=96, max_len=256, spec_steps=spec,
+                               prefix_cache=False)
+        # compile + warm both phases on a short run
+        eng.serve([Request(prompt=p.copy(), max_new=8) for p in prompts])
+        engines[spec] = eng
+    before = {spec: dict(eng.stats) for spec, eng in engines.items()}
+    best = {spec: float("inf") for spec in engines}
+    outs: Dict[int, List[np.ndarray]] = {}
+    for _ in range(reps):
+        for spec, eng in engines.items():        # interleaved: drift cancels
+            reqs = [Request(prompt=p.copy(), max_new=max_new)
+                    for p in prompts]
+            t0 = time.perf_counter()
+            eng.serve(reqs)
+            best[spec] = min(best[spec], time.perf_counter() - t0)
+            outs[spec] = [r.out for r in reqs]
+    for a, b in zip(outs[0], outs[SPEC]):        # speculation is lossless
+        np.testing.assert_array_equal(a, b)
+
+    # per-serve figures over the TIMED reps only (the engines also ran a
+    # warmup serve; the reps are identical workloads, so divide deltas)
+    def _delta(spec, key):
+        return (engines[spec].stats[key] - before[spec][key]) / reps
+    e1 = engines[SPEC]
+    accept = (e1.stats["accepted_tokens"] - before[SPEC]["accepted_tokens"]) \
+        / max(e1.stats["spec_rounds"] - before[SPEC]["spec_rounds"], 1)
+    speedup = best[0] / best[SPEC]
+    spec_steps_per_serve = max(_delta(SPEC, "decode_steps"), 1.0)
+    steps_ratio = _delta(0, "decode_steps") / spec_steps_per_serve
+    row = {
+        "name": "speculative_decode/engine_spec4",
+        "us_per_call": best[SPEC] / spec_steps_per_serve * 1e6,
+        "derived": (f"accept_length={accept:.2f} at {SPEC} steps "
+                    f"(train {trained['steps']} steps to loss "
+                    f"{trained['final_loss']:.2f}); decode wall "
+                    f"{best[0] * 1e3:.0f}ms -> {best[SPEC] * 1e3:.0f}ms = "
+                    f"{speedup:.2f}x ({steps_ratio:.2f}x fewer steps; "
+                    f"byte-identical greedy; bar >={BAR}x)"),
+    }
+    if speedup < BAR:
+        raise RuntimeError(
+            f"speculative_decode: {speedup:.2f}x decode speedup at accept "
+            f"length {accept:.2f} is below the {BAR}x bar — "
+            f"{row['derived']}")
+    return [row]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

@@ -30,14 +30,18 @@ def make_markov(vocab_size: int, seed: int = 0, branching: int = 8
 
 
 def markov_stream(vocab_size: int, seq_len: int, batch: int, *,
-                  seed: int = 0,
-                  stream_seed: Optional[int] = None) -> Iterator[np.ndarray]:
+                  seed: int = 0, stream_seed: Optional[int] = None,
+                  branching: int = 8) -> Iterator[np.ndarray]:
     """Yields (batch, seq_len+1) int32 — slice [:-1] tokens / [1:] targets.
 
     ``seed`` fixes the LANGUAGE (transition matrix); ``stream_seed`` the
     sample stream (defaults to seed+1) — train and eval must share ``seed``
-    or the eval measures a different language."""
-    T = make_markov(vocab_size, seed)
+    or the eval measures a different language.  ``branching`` sets the
+    successors per state: 8 is the default corpus; low values give a
+    low-entropy language (highly predictable continuations — the regime
+    where MTP speculative drafts accept, used by
+    ``benchmarks/speculative_decode.py``)."""
+    T = make_markov(vocab_size, seed, branching=branching)
     cum = np.cumsum(T, axis=1)
     rng = np.random.default_rng(seed + 1 if stream_seed is None
                                 else stream_seed)

@@ -34,6 +34,18 @@ def paged_attention_impl() -> str:
     return os.environ.get("REPRO_PAGED_ATTN_IMPL", "pallas")
 
 
+def default_spec_steps() -> int:
+    """Default MTP speculative draft depth for ``ContinuousEngine``.
+
+    ``REPRO_SPEC_STEPS`` (int, default 0 = speculation off) is used when
+    an engine is constructed with ``spec_steps=None`` — one env flips a
+    whole serving deployment to speculative decode (greedy-only; the
+    engine validates the config has an MTP head).  An explicit
+    ``spec_steps=`` always wins.
+    """
+    return int(os.environ.get("REPRO_SPEC_STEPS", "0"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

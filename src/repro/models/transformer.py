@@ -602,6 +602,33 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, cache: dict, *,
     return lg, new_cache
 
 
+def verify_step(params, tokens: jax.Array, cfg: ModelConfig, cache: dict,
+                seq_lens: jax.Array, *, sparse=None, mesh=None,
+                block_tables: Optional[jax.Array] = None,
+                paged_impl: Optional[str] = None
+                ) -> Tuple[jax.Array, jax.Array, dict]:
+    """Speculative-verification forward: an S-token span at per-sequence
+    start offsets, returning the trunk hidden states alongside the logits.
+
+    tokens (B, S) = [bonus token, draft_1..draft_{S-1}] per sequence;
+    ``seq_lens`` (B,) is each sequence's cached length, so token i of row b
+    sits at absolute position ``seq_lens[b] + i``.  The span rides the SAME
+    paged flash-prefill path as suffix prefill (small-S query blocks at
+    start offsets — the machinery MTP verification needs): KV for all S
+    positions is scattered through the block table and attention is causal
+    by absolute position.  Returns (logits (B,S,V), hidden (B,S,D), cache):
+    ``logits[:, j]`` is the full model's next-token distribution after
+    draft j (the accept test), ``hidden[:, j]`` the final-normed trunk
+    state the NEXT round's MTP draft chains from.  Rejected positions are
+    rolled back host-side by truncating ``seq_lens`` — their pool writes
+    are dead (every later span rewrites before any mask admits them)."""
+    h, _, new_cache = hidden(params, tokens, cfg, sparse=sparse, mesh=mesh,
+                             cache=cache, cache_index=seq_lens,
+                             block_tables=block_tables,
+                             paged_impl=paged_impl)
+    return logits_from_hidden(params["embed"], h, cfg), h, new_cache
+
+
 def decode_step(params, token: jax.Array, cfg: ModelConfig, cache: dict,
                 cache_index: jax.Array, *, sparse=None, mesh=None,
                 block_tables: Optional[jax.Array] = None,

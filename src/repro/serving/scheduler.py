@@ -46,6 +46,26 @@ slot, and decode steps restore it for slots still prefilling.  Recurrent
 state cannot be recovered from KV blocks, so the prefix cache is
 force-disabled for hybrid.
 
+MTP speculative decode (``spec_steps=n``, GLM-5 §2.1/Table 2): every
+scheduler step emits up to ``n+1`` tokens per slot instead of one.  Each
+slot carries the trunk hidden state at its last cached position; the
+shared-parameter MTP head drafts ``n`` tokens from it
+(``repro.serving.speculative.mtp_draft``), and ONE batched S=n+1 span
+forward (``models/transformer.verify_step`` — the paged flash-PREFILL
+kernels at per-sequence start offsets) verifies [pending, draft_1..n],
+scatters their KV, and returns per-position logits + hidden states.  The
+accept length is 1 + the greedy-matching draft prefix (capped per slot so
+verification never writes past the request's lifetime blocks); rejected
+drafts are ROLLED BACK by truncating the slot's length — their pool
+writes are dead weight the next span overwrites before any causal mask
+admits them, and no block changes hands (admission preallocated the
+lifetime, so COW/refcount invariants are untouched by a rollback).
+Greedy outputs are byte-identical for spec on/off; drafting quality only
+moves throughput.  Speculation is greedy-only (temperature>0 requests
+are rejected) and excluded for hybrid (a partial accept cannot roll back
+recurrent state).  ``stats["draft_tokens"]`` / ``stats["accepted_
+tokens"]`` / ``rolling_accept_length`` track the Table-2 quantity.
+
 Device layout: one block pool (``init_paged_cache``, LAYER-MAJOR flat —
 scanned layers carry it through the layer scan as a scan-invariant and
 update it in place, instead of round-tripping stacked xs/ys pools through
@@ -77,7 +97,7 @@ class _Active:
     """One in-flight sequence: its request, blocks, sampling state, and —
     while its prompt is still being chunk-prefilled — the prefill cursor."""
     __slots__ = ("req", "blocks", "out", "lps", "pending", "pending_lp",
-                 "row", "pos")
+                 "row", "pos", "h_last")
 
     def __init__(self, req: Request, blocks: List[int], row: np.ndarray,
                  pos: int):
@@ -89,6 +109,8 @@ class _Active:
         self.pending_lp = 0.0
         self.row = row                       # full block-table row
         self.pos = pos                       # next prefill position
+        self.h_last: Optional[np.ndarray] = None   # (D,) trunk hidden at the
+        # last CACHED position (spec_steps only: the MTP draft input)
 
 
 class ContinuousEngine:
@@ -100,7 +122,8 @@ class ContinuousEngine:
                  prefix_cache: bool = True,
                  prefill_chunk: Optional[int] = None,
                  capture_logprobs: bool = False,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 spec_steps: Optional[int] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
                 f"ContinuousEngine supports transformer + hybrid families, "
@@ -109,12 +132,40 @@ class ContinuousEngine:
                 prefill_chunk <= 0 or prefill_chunk % block_size):
             raise ValueError("prefill_chunk must be a positive multiple of "
                              f"block_size, got {prefill_chunk}")
+        if spec_steps is None:
+            from repro.flags import default_spec_steps
+            spec_steps = default_spec_steps()
+        if spec_steps < 0:
+            raise ValueError(f"spec_steps must be >= 0, got {spec_steps}")
+        if spec_steps > 0:
+            if cfg.family == "hybrid":
+                raise ValueError(
+                    "spec_steps > 0 is unsupported for the hybrid family: "
+                    "a partial accept cannot roll back recurrent state "
+                    "(KV rollback is a length truncation; mamba2 state "
+                    "advanced over rejected drafts is unrecoverable)")
+            if cfg.mtp is None:
+                raise ValueError("spec_steps > 0 needs an MTP head "
+                                 "(cfg.mtp is None)")
+            if not cfg.mtp.share_params and \
+                    spec_steps > cfg.mtp.num_predict:
+                raise ValueError(
+                    f"spec_steps={spec_steps} exceeds the "
+                    f"{cfg.mtp.num_predict} separately-trained MTP layers "
+                    f"(share_params=False has no layer to draft beyond)")
+        self.spec_steps = spec_steps
         self.cfg = cfg
         self.params = params
         self.model = get_model(cfg)
         self.max_batch = max_batch
         self.block_size = block_size
-        self.max_blocks = max(1, max_len // block_size)   # table width
+        self.max_blocks = max(1, max_len // block_size)   # capacity per seq
+        # table WIDTH: speculative verification writes up to spec_steps
+        # positions beyond a slot's lifetime allocation (the batched span
+        # has one shape); the extra columns point at the trash block, so
+        # those writes land in trash instead of clamping into a live block
+        self.table_width = self.max_blocks + \
+            (-(-spec_steps // block_size) if spec_steps else 0)
         self.kv = PagedKVCache(num_blocks, block_size)
         self.prefill_chunk = prefill_chunk
         self.capture_logprobs = capture_logprobs
@@ -132,7 +183,7 @@ class ContinuousEngine:
         else:
             self.pool, _ = self.model.init_paged_cache(cfg, num_blocks + 1,
                                                        block_size, dtype)
-        self.tables = np.full((max_batch, self.max_blocks), self.trash,
+        self.tables = np.full((max_batch, self.table_width), self.trash,
                               np.int32)
         self.lengths = np.zeros((max_batch,), np.int32)
         self.slots: List[Optional[_Active]] = [None] * max_batch
@@ -143,7 +194,12 @@ class ContinuousEngine:
                       "prefill_tokens": 0, "cached_tokens": 0,
                       "cow_forks": 0, "chunk_steps": 0,
                       "gather_bytes_saved": 0,
-                      "prefill_gather_bytes_saved": 0}
+                      "prefill_gather_bytes_saved": 0,
+                      # speculative decode (spec_steps > 0): drafted vs
+                      # accepted counts; spec_rounds counts (slot, step)
+                      # verifications that drafted at least one token
+                      "draft_tokens": 0, "accepted_tokens": 0,
+                      "spec_rounds": 0}
         # 'pallas' reads KV blocks in place (decode kernels at S==1, the
         # flash-prefill kernels on spans); 'ref' restores the full-view
         # gather for both phases (byte-identical greedy — the parity
@@ -178,6 +234,14 @@ class ContinuousEngine:
         if self.hybrid:
             self._ssm_reset = jax.jit(self._ssm_reset_fn)
             self._ssm_restore = jax.jit(self._ssm_restore_fn)
+        if self.spec_steps:
+            # ONE fused jit per speculative round: n chained MTP draft
+            # steps feeding a batched S=spec_steps+1 span verification
+            # through the paged flash-prefill path (replaces the S==1
+            # decode entirely while speculating — a round is one dispatch,
+            # like the decode step it substitutes)
+            self._spec_round = jax.jit(self._spec_round_fn,
+                                       donate_argnums=(4,))
 
     # ------------------------------------------------------------------ jit
     def _decode_fn(self, params, tok, pool, tables, lengths):
@@ -194,9 +258,39 @@ class ContinuousEngine:
                                       paged_impl=self.attn_impl)
 
     def _prefill_fn(self, params, toks, pool, table, starts):
+        if self.spec_steps:
+            # speculating engines prefill through verify_step — the same
+            # span forward, but it also returns the trunk hidden states
+            # the first MTP draft chains from: (logits, hidden, pool)
+            return self.model.verify_step(params, toks, self.cfg, pool,
+                                          starts, block_tables=table,
+                                          paged_impl=self.attn_impl)
         return self.model.prefill(params, toks, self.cfg, pool,
                                   block_tables=table, cache_index=starts,
                                   paged_impl=self.attn_impl)
+
+    def _spec_round_fn(self, params, h_last, tok, positions, pool, tables,
+                       lengths):
+        """Draft-then-verify, fused: MTP chains ``spec_steps`` greedy
+        drafts from each slot's trunk hidden ``h_last`` (at ``positions``)
+        and pending token ``tok``; [tok, drafts] then rides ONE batched
+        span forward (``verify_step`` — KV scattered at ``lengths`` + i,
+        flash-prefill reads in place).  Returns (drafts (B,n), verify
+        (B,n+1) greedy argmax per position, logits (B,n+1,V), hidden
+        (B,n+1,D), pool); acceptance is host-side.  The host only pulls
+        drafts/verify/hidden — the full-vocab logits cross the wire
+        solely under ``capture_logprobs`` (the decode step this round
+        replaces transferred (B,1,V); (B,n+1,V) would scale the hot
+        path's device->host traffic with the vocab for an argmax)."""
+        from repro.serving.speculative import mtp_draft
+        drafts = mtp_draft(params, self.cfg, h_last, tok, positions,
+                           self.spec_steps).astype(jnp.int32)
+        toks = jnp.concatenate([tok, drafts], axis=1)
+        logits, hid, pool = self.model.verify_step(
+            params, toks, self.cfg, pool, lengths, block_tables=tables,
+            paged_impl=self.attn_impl)
+        verify = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return drafts, verify, logits, hid, pool
 
     def _hybrid_prefill_fn(self, params, toks, pool, table, starts, slot):
         # thread ONE slot's recurrent state through the batch-1 prefill;
@@ -264,6 +358,11 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------ scheduler
     def submit(self, req: Request) -> None:
+        if self.spec_steps and req.temperature > 0:
+            raise ValueError(
+                "speculative decoding is greedy-only: acceptance compares "
+                "drafts against the model's argmax (submit temperature=0 "
+                "requests or build the engine with spec_steps=0)")
         need = len(req.prompt) + req.max_new
         if need > self.max_blocks * self.block_size:
             raise ValueError(
@@ -288,7 +387,10 @@ class ContinuousEngine:
         self._retire()
         self._admit()
         self._prefill_chunks()
-        self._decode_active()
+        if self.spec_steps:
+            self._spec_decode_active()
+        else:
+            self._decode_active()
         self.stats["steps"] += 1
 
     def reset_cache(self) -> None:
@@ -380,7 +482,7 @@ class ContinuousEngine:
             blocks = mblocks + fresh
 
         slot = self.slots.index(None)
-        row = np.full((self.max_blocks,), self.trash, np.int32)
+        row = np.full((self.table_width,), self.trash, np.int32)
         row[:len(blocks)] = blocks
         if self.hybrid:
             self.pool = self._ssm_reset(self.pool,
@@ -423,17 +525,22 @@ class ContinuousEngine:
                 jnp.asarray(row), jnp.asarray([start], jnp.int32)]
         if self.hybrid:
             args.append(jnp.asarray(slot, jnp.int32))
-        logits, self.pool = self._prefill(*args)
+        if self.spec_steps:
+            logits, hid, self.pool = self._prefill(*args)
+        else:
+            logits, self.pool = self._prefill(*args)
         if self._prefill_in_place:
             # traffic the in-place span avoided vs the old padded-view
-            # gather (1 × max_blocks × block_size tokens per span call)
+            # gather (1 × table_width × block_size tokens per span call)
             live = ((start + real - 1) // bs + 1) * bs
             self.stats["prefill_gather_bytes_saved"] += \
-                (self.max_blocks * bs - live) * self._token_bytes
+                (self.table_width * bs - live) * self._token_bytes
         s.pos = start + real
         if s.pos >= plen:                       # final span: sample token 1
             lg = np.asarray(logits[0, real - 1], np.float32)
             s.pending, s.pending_lp = self._sample(lg, s.req.temperature)
+            if self.spec_steps:                 # the first draft's input
+                s.h_last = np.asarray(hid[0, real - 1], np.float32)
             self.tables[slot] = s.row
             self.lengths[slot] = plen
 
@@ -502,6 +609,117 @@ class ContinuousEngine:
             s.pending, s.pending_lp = self._sample(lg[i], s.req.temperature)
         self.stats["decode_steps"] += 1
         self.stats["decode_tokens"] += len(active)
+
+    # ------------------------------------------------------- speculative
+    @property
+    def rolling_accept_length(self) -> float:
+        """Mean accepted tokens per speculative round so far (Table 2's
+        accept length; 1.0 = every draft rejected, spec_steps+1 = all
+        accepted).  Rounds near a request's budget cap draft fewer than
+        ``spec_steps`` tokens (never zero), slightly deflating the mean
+        relative to an unbounded decode."""
+        r = self.stats["spec_rounds"]
+        return self.stats["accepted_tokens"] / r if r else 0.0
+
+    def _spec_decode_active(self) -> None:
+        """One speculative round for every decoding slot: draft ``n``
+        tokens per slot with the MTP head, verify [pending, drafts] as ONE
+        batched S=n+1 paged span forward, accept the greedy-matching
+        prefix, roll back the rest.
+
+        Per-slot draft depth is capped at ``max_new - len(out) - 1`` (the
+        only useful depth: deeper accepts could not be emitted) — which is
+        exactly the bound keeping every TRUSTED verify position inside the
+        slot's lifetime block allocation.  The batched span still runs at
+        full width for one compiled shape; a capped slot's deeper writes
+        land in its own dead tail or the trash columns, and its deeper
+        logits are never read (queries at trusted positions cannot attend
+        to them: causal masking by absolute position)."""
+        n = self.spec_steps
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and s.pending is not None
+                  and len(s.out) + 1 < s.req.max_new]
+        if not active:
+            return
+        h = np.zeros((self.max_batch, 1, self.cfg.d_model), np.float32)
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            s = self.slots[i]
+            h[i, 0] = s.h_last
+            tok[i, 0] = s.pending
+            pos[i, 0] = self.lengths[i] - 1      # h_last's position
+        drafts, verify, logits, hid, self.pool = self._spec_round(
+            self.params, jnp.asarray(h), jnp.asarray(tok),
+            jnp.asarray(pos), self.pool, jnp.asarray(self.tables),
+            jnp.asarray(self.lengths))
+        drafts = np.asarray(drafts)                         # (B, n)
+        if self._prefill_in_place:
+            # the span reads each row's blocks in place; the ref gather
+            # would move the whole padded view per call (approximate,
+            # like the decode counter: post-span block coverage per row)
+            bs = self.block_size
+            live = sum((int(l) + n) // bs + 1 for l in self.lengths) * bs
+            self.stats["prefill_gather_bytes_saved"] += \
+                max(0, self.max_batch * self.table_width * bs - live) \
+                * self._token_bytes
+        verify = np.asarray(verify)                         # (B, n+1)
+        hid = np.asarray(hid, np.float32)                   # (B, n+1, D)
+        # full-vocab logits cross to host ONLY for logprob capture
+        lg = np.asarray(logits, np.float32) \
+            if self.capture_logprobs else None
+        for i in active:
+            s = self.slots[i]
+            L = int(self.lengths[i])
+            n_i = min(n, s.req.max_new - len(s.out) - 1)
+            matches = 0
+            while matches < n_i and drafts[i, matches] == \
+                    verify[i, matches]:
+                matches += 1
+            acc = 1 + matches
+            s.out.append(s.pending)             # the guaranteed token
+            s.lps.append(s.pending_lp)
+            for j in range(1, acc):             # accepted draft tokens
+                s.out.append(int(drafts[i, j - 1]))
+                s.lps.append(self._sample(lg[i, j - 1],
+                                          s.req.temperature)[1]
+                             if self.capture_logprobs else 0.0)
+            self._rollback(i, s, L + acc)
+            # bonus token: the model's own choice after the accept point
+            if self.capture_logprobs:
+                s.pending, s.pending_lp = self._sample(lg[i, acc - 1],
+                                                       s.req.temperature)
+            else:
+                s.pending, s.pending_lp = int(verify[i, acc - 1]), 0.0
+            s.h_last = hid[i, acc - 1]
+            # the active filter guarantees len(out)+1 < max_new, so every
+            # processed slot drafted at least one token
+            assert n_i >= 1, (i, n_i)
+            self.stats["spec_rounds"] += 1
+            self.stats["draft_tokens"] += n_i
+            self.stats["accepted_tokens"] += acc
+            self.stats["decode_tokens"] += acc
+        self.stats["decode_steps"] += 1
+
+    def _rollback(self, i: int, s: _Active, new_len: int) -> None:
+        """Roll rejected drafts out of the paged cache: truncate the
+        slot's length to the accept point.
+
+        No block changes hands: admission preallocated blocks for the
+        request's whole lifetime (prompt+max_new), the draft-depth cap
+        keeps every trusted position inside them, and the spec table
+        columns route any deeper (untrusted) write to trash — so there is
+        never a block allocated past the accept point to free, and the
+        COW/refcount state is untouched (verification writes only at
+        positions >= the prompt's COW point, exactly like decode; shared
+        refcount>1 prefix blocks are never writable).  The rejected
+        positions' KV stays as dead garbage in exclusively-owned blocks:
+        the next round's span rewrites positions [new_len, new_len+n]
+        before any causal mask can admit them, and `_finish` only hands
+        the prefix cache blocks covering the final truncated length."""
+        assert new_len <= len(s.blocks) * self.block_size, \
+            (new_len, len(s.blocks))
+        self.lengths[i] = new_len
 
     # ----------------------------------------------------------- sampling
     def _sample(self, row: np.ndarray, temperature: float):

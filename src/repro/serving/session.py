@@ -69,6 +69,12 @@ class AgentSession:
             "cached_tokens": self.engine.stats["cached_tokens"]
             - before["cached_tokens"],
             "new_tokens": int(len(req.out)),
+            # MTP speculative decode accounting (0/0 when spec_steps=0):
+            # this turn's drafted vs accepted token counts
+            "draft_tokens": self.engine.stats["draft_tokens"]
+            - before["draft_tokens"],
+            "accepted_tokens": self.engine.stats["accepted_tokens"]
+            - before["accepted_tokens"],
         }
         return req.out
 

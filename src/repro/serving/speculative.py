@@ -8,16 +8,31 @@ training, so its step-2/3 drafts are out-of-distribution and get rejected
 more).  Verification runs the full model over the drafted tokens; the
 accept length is 1 + the greedy-matching prefix (standard speculative
 decoding, greedy variant).
+
+Two verification paths:
+
+* ``impl="paged"`` (default) — the serving path.  The prompt is prefilled
+  ONCE into a paged block pool and every round verifies only the ``n``
+  drafted tokens as a small-S span through the paged flash-prefill kernels
+  (``repro.kernels.paged_attention.prefill`` — S-token query blocks at
+  per-sequence start offsets), so a round costs O(n·context) attention and
+  O(n) everything else.  This is the same machinery
+  ``ContinuousEngine(spec_steps=...)`` runs per scheduler step.
+* ``impl="ref"`` — the original offline oracle: re-run the FULL model over
+  the entire prefix+drafts every round (O(prefix²) work over a decode).
+  Kept only as the parity oracle for the paged path.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import mtp as mtp_mod
+from repro.core.paging import blocks_for
 from repro.layers.common import embed, logits_from_hidden
 from repro.models import transformer as tfm
 
@@ -44,8 +59,12 @@ def mtp_draft(params, cfg: ModelConfig, h_last: jax.Array,
 
 def verify_and_accept(params, cfg: ModelConfig, prefix: jax.Array,
                       drafts: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Run the full model over prefix+drafts; returns (accept_len (B,),
-    verified greedy tokens (B, n))."""
+    """Full-model re-run verification — the ``impl="ref"`` ORACLE.
+
+    Runs the whole model over prefix+drafts (O(prefix²) across a decode —
+    the serving path verifies through the paged span kernels instead, see
+    ``measure_accept_length(impl="paged")`` / the engine's ``spec_steps``).
+    Returns (accept_len (B,), verified greedy tokens (B, n))."""
     B, n = drafts.shape
     toks = jnp.concatenate([prefix, drafts], axis=1)
     logits = tfm.logits(params, toks, cfg, sparse=False)
@@ -56,23 +75,107 @@ def verify_and_accept(params, cfg: ModelConfig, prefix: jax.Array,
     return acc, verify
 
 
-def measure_accept_length(params, cfg: ModelConfig, prompts: jax.Array,
-                          *, n_steps: int = 8) -> Dict[str, float]:
-    """Average accept length over a batch of prompts, decoding ``n_steps``
-    speculative rounds per prompt (greedy everywhere)."""
+def _measure_ref(params, cfg: ModelConfig, prompts: jax.Array,
+                 n_steps: int) -> Dict[str, object]:
+    """The offline oracle loop: full hidden() + full verify per round.
+
+    The draft pairing mirrors the ENGINE (and MTP training): first the
+    full model's greedy next token is taken (the engine's "pending"),
+    then the MTP head chains ``n`` drafts from (trunk hidden at the last
+    position, embedding of that NEXT token) — the (h_t, emb(token_{t+1}))
+    input distribution the shared layer was trained on.  Each round
+    splices [next, verify tokens] (teacher-forced on the drafts)."""
     B, P = prompts.shape
     n = cfg.mtp.num_predict
     toks = prompts
-    total, rounds = 0.0, 0
+    total = 0.0
     for _ in range(n_steps):
         h, _, _ = tfm.hidden(params, toks, cfg, sparse=False)
         last_h = h[:, -1:]
-        last_tok = toks[:, -1:]
+        lg_last = logits_from_hidden(params["embed"], last_h, cfg)
+        nxt = jnp.argmax(lg_last, axis=-1).astype(toks.dtype)     # (B, 1)
         positions = jnp.full((B, 1), toks.shape[1] - 1)
-        drafts = mtp_draft(params, cfg, last_h, last_tok, positions, n)
-        acc, verify = verify_and_accept(params, cfg, toks, drafts)
+        drafts = mtp_draft(params, cfg, last_h, nxt, positions, n)
+        acc, verify = verify_and_accept(
+            params, cfg, jnp.concatenate([toks, nxt], axis=1), drafts)
         total += float(acc.mean())
-        rounds += 1
-        # append the verified tokens (use model's own greedy continuation)
-        toks = jnp.concatenate([toks, verify], axis=1)
-    return {"accept_length": total / rounds, "speculative_steps": n}
+        toks = jnp.concatenate([toks, nxt, verify], axis=1)
+    return {"accept_length": total / n_steps, "speculative_steps": n,
+            "tokens": np.asarray(toks[:, P:], np.int32)}
+
+
+def _measure_paged(params, cfg: ModelConfig, prompts: jax.Array,
+                   n_steps: int, block_size: int,
+                   attn_impl) -> Dict[str, object]:
+    """Incremental verification over a paged pool: prefill once, then per
+    round (a) verify the n drafts as an S=n span at start offset = the
+    live length, (b) splice the round's verify tokens (the ref path's
+    draft-conditioned continuation) by re-forwarding them over the same
+    positions (overwriting any rejected drafts' KV) — which also yields
+    the next round's trunk hidden and last-position logits for free."""
+    B, P = prompts.shape
+    n = cfg.mtp.num_predict
+    bs = block_size
+    mb = blocks_for(P + n_steps * (n + 1), bs)
+    pool, _ = tfm.init_paged_cache(cfg, B * mb + 1, bs,
+                                   jax.tree.leaves(params)[0].dtype)
+    tables = jnp.asarray(np.arange(B * mb).reshape(B, mb), jnp.int32)
+
+    span = jax.jit(lambda p, t, c, lens: tfm.verify_step(
+        p, t, cfg, c, lens, block_tables=tables, paged_impl=attn_impl,
+        sparse=False))
+    draft = jax.jit(lambda p, h, t, pos: mtp_draft(p, cfg, h, t, pos, n))
+
+    logits, h, pool = span(params, prompts, pool,
+                           jnp.zeros((B,), jnp.int32))
+    last_logits = logits[:, -1]
+    h_last, L = h[:, -1:], P
+    total, out = 0.0, []
+    for _ in range(n_steps):
+        # the engine protocol: "pending" = the model's greedy next token,
+        # drafts chain from (h_last, emb(pending)) — the training pairing
+        nxt = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+        drafts = draft(params, h_last, nxt,
+                       jnp.full((B, 1), L - 1, jnp.int32))
+        lens = jnp.full((B,), L, jnp.int32)
+        lg_d, _, pool = span(params, jnp.concatenate([nxt, drafts], 1),
+                             pool, lens)
+        # greedy choice for draft slot j comes from span position j-1
+        # (position L+j-1: the slot right before draft j)
+        verify = jnp.argmax(lg_d[:, :n], -1)
+        total += float(mtp_mod.speculative_accept_length(
+            drafts, verify).mean())
+        # splice: re-forward [next, verify] at the same start offset so
+        # the cached KV matches the appended context exactly
+        splice = jnp.concatenate([nxt, verify.astype(jnp.int32)], axis=1)
+        lg_v, h_v, pool = span(params, splice, pool, lens)
+        last_logits, h_last = lg_v[:, -1], h_v[:, -1:]
+        L += n + 1
+        out.append(np.asarray(splice, np.int32))
+    return {"accept_length": total / n_steps, "speculative_steps": n,
+            "tokens": np.concatenate(out, axis=1)}
+
+
+def measure_accept_length(params, cfg: ModelConfig, prompts: jax.Array,
+                          *, n_steps: int = 8, impl: str = "paged",
+                          block_size: int = 16,
+                          attn_impl=None) -> Dict[str, object]:
+    """Average accept length over a batch of prompts, decoding ``n_steps``
+    speculative rounds per prompt (greedy everywhere).
+
+    ``impl="paged"`` verifies through the paged span-prefill kernels
+    (``attn_impl`` forwards to the ops dispatch: None = env default,
+    'ref' = gather oracle); ``impl="ref"`` is the old full-re-run oracle.
+    Both return the spliced verify tokens under ``"tokens"``
+    (byte-identical between the two impls).  NOTE these are the full
+    model's greedy choices TEACHER-FORCED on each round's drafts — within
+    a round, slots after the first draft mismatch condition on the
+    rejected draft, so the splice is NOT the free-running greedy rollout
+    unless every draft accepts (the engine path, which re-anchors at the
+    accept point every round, IS byte-identical to plain greedy)."""
+    if impl == "ref":
+        return _measure_ref(params, cfg, prompts, n_steps)
+    if impl != "paged":
+        raise ValueError(f"impl must be 'paged' or 'ref', got {impl!r}")
+    return _measure_paged(params, cfg, prompts, n_steps, block_size,
+                          attn_impl)

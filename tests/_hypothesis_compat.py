@@ -56,6 +56,11 @@ except ImportError:   # pragma: no cover - exercised on bare environments
                 return [elem.example(rng) for _ in range(n)]
             return _Strategy(draw)
 
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elems))
+
     def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
         def deco(fn):
             fn._max_examples = max_examples

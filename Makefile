@@ -14,18 +14,22 @@ bench-serving:
 	$(PY) -m benchmarks.serving_throughput
 
 # CI-sized serving benchmarks: continuous batching + prefix cache + paged
-# decode/prefill + MTP speculative decode on tiny configs (fast mode).
-# Exercises the full benchmark harness path; paged_decode ENFORCES the
-# >=2x decode-step bar at 25% occupancy ON A SCANNED CONFIG, paged_prefill
-# the >=2x suffix-chunk bar (op-level and through model.prefill), and
-# speculative_decode the >=1.2x decode speedup at its measured accept
-# length (byte-identical greedy asserted inside).
+# decode/prefill + MTP speculative decode + async front-end on tiny
+# configs (fast mode).  Exercises the full benchmark harness path;
+# paged_decode ENFORCES the >=2x decode-step bar at 25% occupancy ON A
+# SCANNED CONFIG, paged_prefill the >=2x suffix-chunk bar (op-level and
+# through model.prefill), speculative_decode the >=1.2x decode speedup at
+# its measured accept length (byte-identical greedy asserted inside), and
+# async_frontend BOTH prefill-tokens-saved > 0 across straddled weight
+# pushes (the cache must survive a push) and the >=1.2x tok/s bar for
+# multiplexed vs serialized groups.
 bench-smoke:
 	$(PY) -m benchmarks.run --only serving_throughput --fast
 	$(PY) -m benchmarks.run --only prefix_cache --fast
 	$(PY) -m benchmarks.run --only paged_decode --fast
 	$(PY) -m benchmarks.run --only paged_prefill --fast
 	$(PY) -m benchmarks.run --only speculative_decode --fast
+	$(PY) -m benchmarks.run --only async_frontend --fast
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -23,6 +23,8 @@ SUITES = [
     ("paged_decode", "S3.6: in-place paged decode vs full-view gather"),
     ("paged_prefill", "S3.6: in-place paged prefill vs padded-view gather"),
     ("speculative_decode", "S2.1/S3.6: MTP spec decode through the engine"),
+    ("async_frontend", "S3.6/S4.1: async front-end vs blocking serve "
+                       "under weight pushes"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

@@ -26,6 +26,17 @@ class HeartbeatMonitor:
             self._last[server_id] = time.monotonic()
             self._healthy[server_id] = True
 
+    def deregister(self, server_id: str):
+        """Drop a server from the table entirely — clean shutdown, or a
+        crash the worker reports about ITSELF on the way out.  Unlike an
+        eviction (a lapse the monitor discovered) a deregistered server
+        simply stops existing: it is not counted healthy, never shows up
+        in ``evictions``, and a later sweep won't flag it as a lapse it
+        already told us about."""
+        with self._lock:
+            self._last.pop(server_id, None)
+            self._healthy.pop(server_id, None)
+
     def beat(self, server_id: str):
         with self._lock:
             if self._healthy.get(server_id):

@@ -42,7 +42,11 @@ class TaskService:
 class Orchestrator:
     def __init__(self, engines: List[RolloutEngine], *, group_size: int = 4,
                  staleness_tau: int = 4, seed: int = 0,
-                 env_failure_rate: float = 0.0):
+                 env_failure_rate: float = 0.0, backend: str = "loop",
+                 serving_kw: Optional[dict] = None):
+        if backend not in ("loop", "serving"):
+            raise ValueError(f"backend must be 'loop' or 'serving', "
+                             f"got {backend!r}")
         self.engines = engines
         # unify the TITO gateway across engines: rollouts may be routed to
         # any engine and fragments must land in one place
@@ -59,6 +63,13 @@ class Orchestrator:
         self._threads: List[threading.Thread] = []
         self._group_ids = itertools.count()
         self.env_failure_rate = env_failure_rate
+        # 'loop' = per-token re-forward (RolloutEngine.generate);
+        # 'serving' = the AsyncFrontend path (generate_async): workers
+        # SHARE the engine's continuous decode batch + radix prefix
+        # cache, so the G rollouts of a group prefill their common
+        # prompt once and weight pushes land without a cache reset
+        self.backend = backend
+        self.serving_kw = dict(serving_kw or {})
         self.current_version = lambda: max(e.version for e in engines)
         self.completed = 0
         self.worker_errors: List[str] = []
@@ -78,17 +89,29 @@ class Orchestrator:
         adjustment of task sampling ratios')."""
         self.tasks[name].ratio = ratio
 
-    def _rollout_group(self, worker_rng: np.random.Generator):
-        """One GRPO group: G rollouts of the same problem."""
+    def _rollout_group(self, worker_rng: np.random.Generator,
+                       beat: Optional[Callable[[], None]] = None):
+        """One GRPO group: G rollouts of the same problem.
+
+        ``beat`` fires between rollouts — a group is ``group_size``
+        generations back-to-back, easily longer than the heartbeat
+        timeout, and a worker that only beats once per GROUP looks
+        dead to the sweep while it is merely mid-group."""
         task = self._pick_task()
         problem = task.sample_problem(worker_rng)
         gkey = f"{task.name}-g{next(self._group_ids)}"
         for _ in range(self.group_size):
+            if beat is not None:
+                beat()
             rid = self.gateway.new_rollout(task.name)
             rank = self.router.route(rid)
             engine = self.engines[rank % len(self.engines)]
             self.router.request(rid, len(problem["prompt"]))
-            gen = engine.generate(rid, problem["prompt"], task.max_new)
+            if self.backend == "serving":
+                gen = engine.generate_async(rid, problem["prompt"],
+                                            task.max_new, **self.serving_kw)
+            else:
+                gen = engine.generate(rid, problem["prompt"], task.max_new)
             fail = bool(worker_rng.random() < self.env_failure_rate)
             reward, env_fail = (0.0, True) if fail else task.reward(problem,
                                                                     gen)
@@ -109,12 +132,17 @@ class Orchestrator:
                 time.sleep(0.005)
                 continue
             try:
-                self._rollout_group(rng)
-            except Exception as e:   # noqa: BLE001 — crash => missed beats
+                self._rollout_group(rng, beat=lambda: self.monitor.beat(sid))
+            except Exception as e:   # noqa: BLE001
                 import traceback
                 with self._lock:
                     self.worker_errors.append(
                         f"{sid}: {e}\n{traceback.format_exc()}")
+                # take ourselves out of the heartbeat table NOW — a dead
+                # worker left registered is a zombie the sweep only
+                # discovers timeout_s later (and wait_for_groups would
+                # spin its full timeout against zero live workers)
+                self.monitor.deregister(sid)
                 return
 
     def start(self, n_workers: int = 2):
@@ -129,10 +157,22 @@ class Orchestrator:
             t.join(timeout=5)
 
     def wait_for_groups(self, n: int, timeout_s: float = 300) -> bool:
+        """Block until ``n`` groups are ready.  Returns False on timeout;
+        raises RuntimeError as soon as EVERY worker has crashed (no more
+        groups are ever coming — spinning out the timeout just hides the
+        tracebacks sitting in ``worker_errors``)."""
         t0 = time.monotonic()
         while self.buffer.n_ready() < n:
             if time.monotonic() - t0 > timeout_s:
                 return False
             self.monitor.sweep()
+            if self._threads and not any(t.is_alive() for t in self._threads):
+                with self._lock:
+                    errs = list(self.worker_errors)
+                if errs:
+                    raise RuntimeError(
+                        f"all {len(self._threads)} rollout workers crashed "
+                        f"before {n} groups were ready:\n" + "\n".join(errs))
+                return self.buffer.n_ready() >= n
             time.sleep(0.01)
         return True

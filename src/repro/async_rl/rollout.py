@@ -14,13 +14,22 @@ Two generation paths:
 
 * ``generate`` — the original per-rollout loop (full-context re-forward
   each token): simple, fragment-granular weight staleness, no KV cache.
-* ``generate_batch`` — the SERVING-ENGINE path: rollouts go through a
-  ``ContinuousEngine`` with the radix prefix cache, so a group that
-  shares a system prompt (the GRPO shape — N rollouts per task) prefills
-  it ONCE and every sequence decodes through the paged KV cache.
-  Per-token behavior logprobs come back on the request
-  (``capture_logprobs``) and are recorded through the same TITO gateway,
-  one fragment per rollout at the snapshot version the batch ran under.
+* ``generate_batch`` / ``generate_async`` — the SERVING path: rollouts go
+  through an ``AsyncFrontend`` over a ``ContinuousEngine`` with the radix
+  prefix cache, so a group that shares a system prompt (the GRPO shape —
+  N rollouts per task) prefills it ONCE and every sequence decodes
+  through the paged KV cache.  The front-end's serve thread owns the
+  engine: many rollout workers submit CONCURRENTLY and multiplex into one
+  decode batch, and ``push_weights`` hands new snapshots straight through
+  — applied at the engine's drain barrier with version-tagged incremental
+  prefix-cache invalidation (NO full reset; same-version blocks keep
+  their reuse, stale ones age out via LRU).  Per-token behavior logprobs
+  come back on the request (``capture_logprobs``) and are recorded
+  through the same TITO gateway, one fragment per rollout stamped with
+  the EXACT snapshot version that produced it (``Request.out_version`` —
+  a request admitted before a push drains at its admitted version while
+  later submissions pick up the new one, so concurrent pushes never mix
+  versions inside a trajectory).
 """
 from __future__ import annotations
 
@@ -51,12 +60,11 @@ class RolloutEngine:
         # (one compile for the whole run, not one per sequence length)
         self._step = jax.jit(self._logits_fn)
         self._seed = seed
-        self._serving = None          # lazy ContinuousEngine (generate_batch)
+        self._frontend = None         # lazy AsyncFrontend over the engine
         self._serving_kw = None
-        self._serving_version = -1
-        # engine build + serve run under their OWN lock: generate_batch
-        # calls snapshot() (which takes self._lock), and serve() must not
-        # block weight pushes for the whole batch
+        # the frontend build runs under its OWN lock: its serve thread
+        # owns the engine afterwards, so nothing here ever blocks a
+        # weight push on an in-flight batch
         self._serving_lock = threading.Lock()
 
     def _logits_fn(self, params, tokens, cur_len):
@@ -65,11 +73,20 @@ class RolloutEngine:
                                             keepdims=False)[0]
 
     def push_weights(self, params, version: int):
-        """Trainer -> inference weight sync (the NCCL broadcast stand-in)."""
+        """Trainer -> inference weight sync (the NCCL broadcast stand-in).
+
+        Forwards straight into the serving front-end (when built): the
+        engine applies the snapshot at its drain barrier and invalidates
+        the prefix cache INCREMENTALLY via block version tags — in-flight
+        rollouts finish at their admitted version, new ones pick up this
+        one, and nothing resets."""
         with self._lock:
             self._params = jax.tree.map(
                 lambda x: x.astype(self.engine_dtype), params)
             self.version = version
+            cast, fe = self._params, self._frontend
+        if fe is not None:
+            fe.push_weights(cast, version)
 
     def snapshot(self):
         with self._lock:
@@ -118,58 +135,78 @@ class RolloutEngine:
         return np.asarray(out, np.int32)
 
     # ------------------------------------------------------- engine-backed
-    def serving_engine(self, *, max_batch: int = 8, block_size: int = 16,
-                       num_blocks: int = 256, max_len: int = 512):
-        """The paged continuous-batching engine this rollout worker decodes
-        through (built lazily, reused across batches — its radix prefix
-        cache persists, so a system prompt shared across GRPO groups stays
-        resident between calls)."""
+    def serving_frontend(self, *, max_batch: int = 8, block_size: int = 16,
+                         num_blocks: int = 256, max_len: int = 512):
+        """The async front-end this rollout worker decodes through (built
+        lazily, shared by every worker thread hitting this engine — its
+        serve thread owns one paged ``ContinuousEngine`` whose radix
+        prefix cache persists across batches, so a system prompt shared
+        across GRPO groups stays resident between calls)."""
         kw = dict(max_batch=max_batch, block_size=block_size,
                   num_blocks=num_blocks, max_len=max_len)
         with self._serving_lock:
-            if self._serving is None:
+            if self._frontend is None:
+                from repro.serving.frontend import AsyncFrontend
                 from repro.serving.scheduler import ContinuousEngine
                 with self._lock:
-                    params = self._params
+                    params, version = self._params, self.version
                 # seed follows the worker so DP ranks sample distinct
                 # streams, exactly like the generate() path
-                self._serving = ContinuousEngine(
+                eng = ContinuousEngine(
                     self.cfg, params, capture_logprobs=True,
-                    seed=self._seed, **kw)
+                    seed=self._seed, weight_version=version, **kw)
+                self._frontend = AsyncFrontend(eng)
                 self._serving_kw = kw
             elif kw != self._serving_kw:
                 raise ValueError(
                     f"serving engine already built with {self._serving_kw},"
                     f" got {kw}: engine geometry is fixed per worker")
-            return self._serving
+            return self._frontend
+
+    def serving_engine(self, **kw):
+        """The paged engine under the front-end (stats/introspection; the
+        front-end's serve thread owns all mutation)."""
+        return self.serving_frontend(**kw).engine
 
     def generate_batch(self, rollout_ids: Sequence[str],
                        prompts: Sequence[np.ndarray], max_new: int, *,
                        temperature: float = 1.0,
                        **engine_kw) -> List[np.ndarray]:
-        """Serve a batch of rollouts through the prefix-cached engine.
+        """Serve a batch of rollouts through the prefix-cached front-end.
 
         Rollouts sharing a prompt prefix (system prompt, few-shot header)
-        prefill it once; see ``benchmarks/prefix_cache.py``.  The whole
-        batch runs at ONE weight snapshot — staleness granularity is the
-        batch, not the fragment (the trade the paged KV cache buys)."""
-        from repro.serving.engine import Request
-        eng = self.serving_engine(**engine_kw)
-        reqs = [Request(prompt=np.asarray(p, np.int32), max_new=max_new,
-                        temperature=temperature) for p in prompts]
-        with self._serving_lock:         # one serve loop per engine at a time
-            params, version = self.snapshot()
-            eng.params = params          # same pytree structure: no retrace
-            if version != self._serving_version:
-                # cached KV was computed under OLDER weights: aliasing it
-                # into a v_new forward would mix versions inside one
-                # trajectory while the fragment is stamped with one version
-                eng.reset_cache()
-                self._serving_version = version
-            eng.serve(reqs)
-        for rid, r in zip(rollout_ids, reqs):
-            self.gateway.record(rid, r.out, r.out_logprobs, version)
-        return [r.out for r in reqs]
+        prefill it once; see ``benchmarks/prefix_cache.py``.  Submission
+        is non-exclusive — other workers' rollouts and trainer weight
+        pushes interleave freely — and each fragment is recorded at the
+        version its OWN request actually ran under (a push landing
+        mid-batch splits the batch across snapshots cleanly instead of
+        blocking behind it)."""
+        fe = self.serving_frontend(**engine_kw)
+        handles = [fe.submit(p, max_new=max_new, temperature=temperature)
+                   for p in prompts]
+        outs = []
+        for rid, h in zip(rollout_ids, handles):
+            r = fe.result(h)
+            self.gateway.record(rid, r.out, r.out_logprobs, r.out_version)
+            outs.append(r.out)
+        return outs
+
+    def generate_async(self, rollout_id: str, prompt: np.ndarray,
+                       max_new: int, *, temperature: float = 1.0,
+                       **engine_kw) -> np.ndarray:
+        """One rollout through the front-end: submit, block on the
+        result, record the TITO fragment at the producing version.
+
+        The worker thread blocks, but GENERATION does not — all
+        concurrent callers' requests share the engine's decode batch, so
+        a slow group elsewhere never serializes this one (the
+        decoupled-generation posture ``Orchestrator`` workers use)."""
+        fe = self.serving_frontend(**engine_kw)
+        h = fe.submit(prompt, max_new=max_new, temperature=temperature)
+        r = fe.result(h)
+        self.gateway.record(rollout_id, r.out, r.out_logprobs,
+                            r.out_version)
+        return r.out
 
 
 def _logsumexp(x: np.ndarray) -> float:

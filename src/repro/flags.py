@@ -46,6 +46,18 @@ def default_spec_steps() -> int:
     return int(os.environ.get("REPRO_SPEC_STEPS", "0"))
 
 
+def frontend_wait_s() -> float:
+    """Idle-wait granularity of the ``AsyncFrontend`` serve thread.
+
+    When the engine has no work the serve thread parks on its condition
+    variable and re-checks at this cadence (``REPRO_FRONTEND_WAIT_S``,
+    seconds, default 0.05).  Submissions/pushes notify the condition
+    immediately, so this only bounds wakeup latency against lost
+    notifications — it is NOT a polling tax on the hot path (a busy
+    engine steps back-to-back without waiting)."""
+    return float(os.environ.get("REPRO_FRONTEND_WAIT_S", "0.05"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

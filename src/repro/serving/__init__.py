@@ -1,5 +1,7 @@
 from repro.serving.engine import (Request, ServingEngine,  # noqa: F401
                                   sample_token)
+from repro.serving.frontend import (AsyncFrontend, AsyncSession,  # noqa: F401
+                                    FrontendClosed, PollResult)
 from repro.serving.paged import (CacheFull, PagedKVCache,  # noqa: F401
                                  blocks_for)
 from repro.serving.pd_sim import ServingConfig, Workload, simulate  # noqa: F401

@@ -31,6 +31,10 @@ class Request:
     # per-token behavior logprobs of ``out`` (filled by ContinuousEngine
     # when capture_logprobs=True — the TITO contract for RL rollouts)
     out_logprobs: Optional[np.ndarray] = None
+    # weight version the WHOLE generation ran under (stamped on admit by
+    # ContinuousEngine; the drain-barrier push protocol guarantees one
+    # request never spans two versions — the TITO version stamp)
+    out_version: Optional[int] = None
 
 
 def sample_token(logits_row: np.ndarray, temperature: float, rng) -> int:

@@ -1,0 +1,383 @@
+"""Async serving front-end: ``submit()`` / ``poll()`` over one engine.
+
+``ContinuousEngine`` already multiplexes many sequences over one decode
+batch, but its driving API is a blocking turn-by-turn loop —
+``serve(reqs)`` owns the caller's thread until the whole batch drains, so
+nothing can join mid-flight and a trainer weight push has to wait at the
+batch boundary.  ``AsyncFrontend`` inverts that: ONE background serve
+thread owns the engine and steps it continuously, while any number of
+client threads
+
+  * ``submit(prompt, ...)`` a request at ANY time — it is admitted into
+    the live decode batch at the next iteration boundary (continuous
+    batching across callers, not just within one call);
+  * ``poll(handle)`` the tokens streamed so far (non-blocking) or
+    ``result(handle)`` the finished request (blocking);
+  * ``push_weights(params, version)`` a new weight snapshot — applied by
+    the engine at its drain barrier with INCREMENTAL prefix-cache
+    invalidation (version-tagged blocks; see ``scheduler.push_weights``),
+    never blocking the pusher and never resetting the world;
+  * run multi-turn conversations through ``AsyncSession`` — the
+    ``AgentSession`` semantics (prefill only the new message, pin the
+    conversation's blocks between turns) with non-blocking turns.
+
+Threading contract: the engine and every host-side structure under it
+(allocator, radix tree, block tables) are touched ONLY by the serve
+thread.  Client calls communicate through locked inboxes; completions
+come back through per-ticket events.  ``Request.out_version`` stamps tell
+every consumer (e.g. the TITO gateway in ``async_rl.rollout``) exactly
+which weight snapshot produced a trajectory — the drain barrier
+guarantees a single version per request even when pushes land mid-run.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import Request
+from repro.serving.scheduler import ContinuousEngine
+
+
+class FrontendClosed(RuntimeError):
+    """Raised by submit/push on a closed (or crashed) front-end."""
+
+
+class PollResult:
+    """Snapshot of one in-flight request: tokens streamed so far, the
+    weight version serving it (None until admitted), completion flag, and
+    the error that killed it (None normally)."""
+    __slots__ = ("tokens", "done", "version", "error")
+
+    def __init__(self, tokens: np.ndarray, done: bool,
+                 version: Optional[int], error: Optional[Exception]):
+        self.tokens = tokens
+        self.done = done
+        self.version = version
+        self.error = error
+
+    def __repr__(self):  # pragma: no cover - debugging sugar
+        return (f"PollResult(n={len(self.tokens)}, done={self.done}, "
+                f"version={self.version}, error={self.error!r})")
+
+
+class _Ticket:
+    __slots__ = ("handle", "req", "tokens", "version", "error", "done",
+                 "on_finish")
+
+    def __init__(self, handle: int, req: Request,
+                 on_finish: Optional[Callable[[Request], None]]):
+        self.handle = handle
+        self.req = req
+        self.tokens: List[int] = []        # streamed so far (out only)
+        self.version: Optional[int] = None
+        self.error: Optional[Exception] = None
+        self.done = threading.Event()
+        self.on_finish = on_finish
+
+
+class AsyncFrontend:
+    """Background serve thread multiplexing submit()/poll() clients and
+    weight pushes over one ``ContinuousEngine``."""
+
+    def __init__(self, engine: ContinuousEngine):
+        self.engine = engine
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._inbox: List[_Ticket] = []          # awaiting engine.submit
+        self._pushes: List[tuple] = []           # (params, version)
+        self._calls: List[tuple] = []            # (fn, done_event)
+        self._tickets: Dict[int, _Ticket] = {}   # handle -> ticket
+        self._live: Dict[int, _Ticket] = {}      # id(req) -> ticket
+        self._handles = itertools.count()
+        self._stop = False
+        self.crashed: Optional[BaseException] = None
+        self.callback_errors: List[str] = []
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="serve-frontend", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------- clients
+    def submit(self, prompt: Sequence[int], *, max_new: int = 32,
+               temperature: float = 0.0,
+               on_finish: Optional[Callable[[Request], None]] = None
+               ) -> int:
+        """Enqueue one request; returns a handle for poll()/result().
+
+        Safe from any thread at any time — the serve thread admits it
+        into the continuous batch at the next iteration.  Geometry
+        validation happens here, on the caller's thread, so impossible
+        requests fail fast.  ``on_finish(req)`` (if given) runs ON THE
+        SERVE THREAD right after the request retires, with the engine
+        state consistent — the hook sessions use to pin blocks."""
+        req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new,
+                      temperature=temperature)
+        self.engine.validate(req)
+        with self._work:
+            if self._stop or self.crashed is not None:
+                raise FrontendClosed(f"front-end is closed "
+                                     f"(crashed={self.crashed!r})")
+            t = _Ticket(next(self._handles), req, on_finish)
+            self._tickets[t.handle] = t
+            self._inbox.append(t)
+            self._work.notify()
+        return t.handle
+
+    def push_weights(self, params, version: int) -> None:
+        """Hand the engine a new weight snapshot; returns immediately.
+
+        The serve thread forwards it to ``engine.push_weights`` — applied
+        at the drain barrier, invalidating the prefix cache incrementally
+        via the version tags.  Generation is never interrupted: in-flight
+        requests drain at their admitted version, queued and future
+        submissions pick up the new one."""
+        with self._work:
+            if self._stop or self.crashed is not None:
+                raise FrontendClosed(f"front-end is closed "
+                                     f"(crashed={self.crashed!r})")
+            self._pushes.append((params, version))
+            self._work.notify()
+
+    def poll(self, handle: int) -> PollResult:
+        """Non-blocking progress snapshot for one submitted request."""
+        with self._lock:
+            t = self._tickets[handle]
+            return PollResult(np.asarray(t.tokens, np.int32),
+                              t.done.is_set(), t.version, t.error)
+
+    def result(self, handle: int, timeout: Optional[float] = None
+               ) -> Request:
+        """Block until the request finishes; returns it (``out``,
+        ``out_logprobs``, ``out_version`` filled).  Forgets the handle."""
+        with self._lock:
+            t = self._tickets[handle]
+        if not t.done.wait(timeout):
+            raise TimeoutError(f"request {handle} still running after "
+                               f"{timeout}s")
+        with self._lock:
+            self._tickets.pop(handle, None)
+        if t.error is not None:
+            raise t.error
+        return t.req
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Wait until every request submitted so far has finished."""
+        with self._lock:
+            pending = [t for t in self._tickets.values()
+                       if not t.done.is_set()]
+        for t in pending:
+            if not t.done.wait(timeout):
+                raise TimeoutError(f"request {t.handle} still running")
+
+    def call(self, fn: Callable[[], None], *, wait: bool = True) -> None:
+        """Run ``fn`` on the serve thread (engine state consistent there).
+
+        Never call with ``wait=True`` FROM the serve thread (an
+        ``on_finish`` hook) — that deadlocks; hooks already run there."""
+        done = threading.Event() if wait else None
+        with self._work:
+            if self._stop or self.crashed is not None:
+                raise FrontendClosed("front-end is closed")
+            self._calls.append((fn, done))
+            self._work.notify()
+        if done is not None:
+            done.wait()
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop accepting work, drain everything in flight, join the
+        serve thread.  Idempotent."""
+        with self._work:
+            self._stop = True
+            self._work.notify()
+        self._thread.join(timeout)
+
+    @property
+    def version(self) -> int:
+        """Engine weight version (the one new admissions run under)."""
+        return self.engine.weight_version
+
+    @property
+    def stats(self) -> dict:
+        return dict(self.engine.stats)
+
+    # -------------------------------------------------------- serve thread
+    def _serve_loop(self) -> None:
+        eng = self.engine
+        from repro.flags import frontend_wait_s
+        wait_s = frontend_wait_s()
+        try:
+            while True:
+                with self._work:
+                    while not (self._stop or self._inbox or self._pushes
+                               or self._calls or eng.busy):
+                        self._work.wait(timeout=wait_s)
+                    if self._stop and not (self._inbox or self._pushes
+                                           or self._calls or eng.busy):
+                        return
+                    inbox, self._inbox = self._inbox, []
+                    pushes, self._pushes = self._pushes, []
+                    calls, self._calls = self._calls, []
+                for params, version in pushes:
+                    eng.push_weights(params, version)
+                for fn, done in calls:
+                    try:
+                        fn()
+                    finally:
+                        if done is not None:
+                            done.set()
+                for t in inbox:
+                    try:
+                        eng.submit(t.req)
+                        self._live[id(t.req)] = t
+                    except Exception as e:      # noqa: BLE001
+                        self._fail(t, e)
+                if eng.busy:
+                    eng.step()
+                    self._harvest()
+        except BaseException as e:              # noqa: BLE001 - serve crash
+            with self._lock:
+                self.crashed = e
+                for t in self._tickets.values():
+                    if not t.done.is_set():
+                        t.error = RuntimeError(
+                            f"serve thread crashed: {e!r}")
+                        t.done.set()
+            raise
+
+    def _harvest(self) -> None:
+        """After one engine step: stream new tokens out of live slots and
+        complete tickets whose requests retired."""
+        eng = self.engine
+        with self._lock:
+            for s in eng.slots:
+                if s is None:
+                    continue
+                t = self._live.get(id(s.req))
+                if t is None:
+                    continue
+                t.version = s.version
+                if len(s.out) > len(t.tokens):
+                    t.tokens.extend(s.out[len(t.tokens):])
+        finished = [t for t in list(self._live.values())
+                    if t.req.out is not None]
+        for t in finished:
+            with self._lock:
+                del self._live[id(t.req)]
+                t.tokens = [int(x) for x in t.req.out]
+                t.version = t.req.out_version
+            if t.on_finish is not None:
+                try:
+                    t.on_finish(t.req)
+                except Exception as e:          # noqa: BLE001
+                    self.callback_errors.append(
+                        f"on_finish({t.handle}): {e!r}")
+            t.done.set()
+
+    def _fail(self, t: _Ticket, e: Exception) -> None:
+        with self._lock:
+            t.error = e
+        t.done.set()
+
+
+class AsyncSession:
+    """Multi-turn conversation through the front-end: the ``AgentSession``
+    semantics (prefill only the new message, pin conversation blocks
+    between turns) with non-blocking turns.
+
+    ``send()`` submits turn N+1 as soon as turn N's reply is known
+    (waiting for it if necessary, since the reply is part of the next
+    prompt) and returns a handle — stream the reply with
+    ``frontend.poll(handle)`` or block with ``result()``.  Pinning runs
+    on the serve thread via the ``on_finish`` hook.  Across a weight
+    push the pin naturally shrinks to the current-version blocks: the
+    next turn re-prefills the conversation under the new weights and
+    re-pins (exactly the incremental-invalidation contract)."""
+
+    def __init__(self, frontend: AsyncFrontend, *,
+                 temperature: float = 0.0):
+        if frontend.engine.prefix is None:
+            raise ValueError("AsyncSession needs an engine with "
+                             "prefix_cache=True (and a non-hybrid family: "
+                             "recurrent state cannot be re-aliased)")
+        self.frontend = frontend
+        self.temperature = temperature
+        self.tokens: List[int] = []       # full conversation so far
+        self._pinned: List[int] = []      # serve-thread-owned pin
+        self._turn_handle: Optional[int] = None
+        self._turn_prompt: Optional[List[int]] = None
+        self.turns = 0
+        self.last_turn: Dict[str, int] = {}
+        self._closed = False
+
+    # ----------------------------------------------------------------- api
+    def send(self, user_tokens: Sequence[int], *, max_new: int = 32,
+             temperature: Optional[float] = None) -> int:
+        """Append ``user_tokens``; submit the turn.  Returns the handle
+        (poll it for streaming; ``result()`` for the blocking reply)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        self._sync()                      # previous reply joins the prompt
+        prompt = self.tokens + [int(t) for t in user_tokens]
+        handle = self.frontend.submit(
+            prompt, max_new=max_new,
+            temperature=self.temperature if temperature is None
+            else temperature,
+            on_finish=self._pin)
+        self._turn_handle, self._turn_prompt = handle, prompt
+        return handle
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block for the current turn's reply."""
+        req = self._sync(timeout)
+        if req is None:
+            raise RuntimeError("no turn in flight")
+        return req.out
+
+    def poll(self) -> PollResult:
+        if self._turn_handle is None:
+            raise RuntimeError("no turn in flight")
+        return self.frontend.poll(self._turn_handle)
+
+    def close(self) -> None:
+        """Finish the in-flight turn (if any) and drop the pin."""
+        if self._closed:
+            return
+        self._sync()
+        pinned, self._pinned = self._pinned, []
+        if pinned:
+            self.frontend.call(
+                lambda: self.frontend.engine.kv.release(pinned))
+        self._closed = True
+
+    @property
+    def pinned_blocks(self) -> int:
+        return len(self._pinned)
+
+    # ------------------------------------------------------------ internal
+    def _sync(self, timeout: Optional[float] = None) -> Optional[Request]:
+        if self._turn_handle is None:
+            return None
+        req = self.frontend.result(self._turn_handle, timeout)
+        self.tokens = self._turn_prompt + [int(t) for t in req.out]
+        self.turns += 1
+        self.last_turn = {"prompt_tokens": len(self._turn_prompt),
+                          "new_tokens": int(len(req.out)),
+                          "version": int(req.out_version)}
+        self._turn_handle = self._turn_prompt = None
+        return req
+
+    def _pin(self, req: Request) -> None:
+        """Serve-thread hook: swap the pin to the grown conversation.
+
+        ``match()`` retains on our behalf; releasing the old pin after
+        keeps blocks shared by both turns above zero.  Post-push, stale
+        blocks are refused by match, so the pin covers only KV the next
+        turn can actually alias."""
+        eng = self.frontend.engine
+        toks = self._turn_prompt + [int(t) for t in req.out]
+        old = self._pinned
+        _, self._pinned = eng.prefix.match(toks)
+        if old:
+            eng.kv.release(old)

@@ -25,6 +25,18 @@ When the free list runs dry ``alloc`` asks an optional ``evictor`` (the
 prefix cache's LRU) to release cached, unreferenced blocks before giving
 up with ``CacheFull``.
 
+Blocks are also VERSION-TAGGED: the allocator carries a monotonically
+increasing weight ``version`` (bumped by ``set_version`` when the engine
+applies a trainer weight push) and every block is stamped with the
+version current when it was allocated — which, under the engine's
+drain-barrier push protocol (a push applies only when no sequence is
+in flight), is exactly the version of the weights that WROTE its KV.
+The prefix cache consults ``block_version`` so admission never aliases
+KV computed under older weights into a newer forward; stale blocks are
+not eagerly freed on a push — they age out through the LRU evictor
+(incremental invalidation instead of a full cache reset).  A freed
+block loses its stamp; re-allocation restamps at the current version.
+
 Invariants (tested in tests/test_paged_serving.py + test_prefix_cache.py):
   * every block is either free or allocated, never both (conservation:
     ``free_blocks + used_blocks == num_blocks`` at all times);
@@ -60,6 +72,11 @@ class PagedKVCache:
         # Called with the shortfall when alloc cannot be satisfied; should
         # release() cached blocks and return how many it let go.
         self.evictor: Optional[Callable[[int], int]] = None
+        # weight version stamped onto blocks at alloc time (the version of
+        # the weights that write their KV, under the drain-barrier push
+        # protocol); bumped by set_version on an applied weight push
+        self.version = 0
+        self._bver: Dict[int, int] = {}
 
     @property
     def free_blocks(self) -> int:
@@ -75,6 +92,26 @@ class PagedKVCache:
 
     def blocks_for(self, n_tokens: int) -> int:
         return blocks_for(n_tokens, self.block_size)
+
+    # ------------------------------------------------------------- versions
+    def set_version(self, version: int) -> None:
+        """Bump the allocator's weight version (an applied weight push).
+
+        Blocks already allocated keep their old stamp — they hold KV
+        computed under the previous weights and must never be aliased
+        into a newer forward (``PrefixCache.match`` enforces this)."""
+        if version < self.version:
+            raise ValueError(f"weight versions are monotone: "
+                             f"{version} < {self.version}")
+        self.version = version
+
+    def block_version(self, block: int) -> int:
+        """Version stamped when ``block`` was allocated (-1 if free)."""
+        return self._bver.get(block, -1)
+
+    def stale_blocks(self) -> int:
+        """Allocated blocks stamped with an older version than current."""
+        return sum(1 for v in self._bver.values() if v != self.version)
 
     # ------------------------------------------------------------ lifetime
     def alloc(self, n: int) -> List[int]:
@@ -92,6 +129,7 @@ class PagedKVCache:
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._ref[b] = 1
+            self._bver[b] = self.version
         return blocks
 
     def retain(self, blocks: List[int]) -> None:
@@ -118,6 +156,7 @@ class PagedKVCache:
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 del self._ref[b]
+                del self._bver[b]
                 self._free.append(b)
 
     def free(self, blocks: List[int]) -> None:
@@ -136,4 +175,5 @@ class PagedKVCache:
                              f"use release()")
         for b in blocks:
             del self._ref[b]
+            del self._bver[b]
             self._free.append(b)

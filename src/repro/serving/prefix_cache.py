@@ -31,6 +31,28 @@ readers add their own via ``PagedKVCache.retain``.
   property (every cached block's ancestors are cached) is preserved.
   Registered as ``kv.evictor`` so allocation pressure reclaims cache
   space automatically instead of raising ``CacheFull``.
+
+Weight-version awareness (the incremental-invalidation contract): KV is a
+function of the tokens AND the weights, so a trainer weight push makes
+every cached block numerically stale.  Instead of resetting the world,
+the cache leans on the allocator's block version stamps
+(``PagedKVCache.block_version`` vs ``kv.version``):
+
+* ``match`` refuses to walk into a node whose block was written under an
+  older version — admission simply never aliases stale KV into a newer
+  forward (``stats["version_refused"]`` counts refused walks);
+* ``insert`` REFRESHES a stale node in place when a retired sequence
+  re-derives the same token content under the current weights: the
+  node adopts the new block and the stale one is released
+  (``stats["refreshed_blocks"]``) — so hot prefixes heal version by
+  version without ever duplicating tree paths;
+* ``evict`` reclaims stale blocks FIRST (they can never be matched
+  again), then falls back to LRU among current-version leaves — a push
+  invalidates lazily, under allocation pressure, never eagerly.
+
+Because ``insert`` walks root-first, every fresh node's ancestors are
+fresh, so ``match``'s stop-at-first-stale walk never misses a reachable
+current-version prefix.
 """
 from __future__ import annotations
 
@@ -70,13 +92,24 @@ class PrefixCache:
         self._tick = 0
         self.stats = {"hits": 0, "misses": 0, "matched_tokens": 0,
                       "evictions": 0, "inserted_blocks": 0,
-                      "deduped_blocks": 0}
+                      "deduped_blocks": 0, "version_refused": 0,
+                      "refreshed_blocks": 0, "stale_evictions": 0}
         kv.evictor = self.evict
 
     # ------------------------------------------------------------- queries
     @property
     def cached_blocks(self) -> int:
         return sum(1 for _ in self._iter_nodes())
+
+    @property
+    def stale_cached_blocks(self) -> int:
+        """Cached blocks written under an older weight version — dead
+        weight awaiting lazy eviction (never matched, evicted first)."""
+        return sum(1 for n in self._iter_nodes() if not self._fresh(n))
+
+    def _fresh(self, node: _Node) -> bool:
+        """Is the node's block aliasable at the CURRENT weight version?"""
+        return self.kv.block_version(node.block) == self.kv.version
 
     def _iter_nodes(self):
         stack = list(self.root.children.values())
@@ -108,6 +141,12 @@ class PrefixCache:
             child = node.children.get(tuple(int(t) for t in tokens[m:m + bs]))
             if child is None:
                 break
+            if not self._fresh(child):
+                # KV written under older weights: never alias it into a
+                # newer forward — the caller re-prefills from here and
+                # insert() will refresh the stale path on retire
+                self.stats["version_refused"] += 1
+                break
             node = child
             blocks.append(node.block)
             m += bs
@@ -119,7 +158,7 @@ class PrefixCache:
         if rest:
             for key, child in node.children.items():
                 k = _common_prefix(key, rest)
-                if k > best_k:
+                if k > best_k and self._fresh(child):
                     best, best_k = child, k
         if best is not None:
             blocks.append(best.block)
@@ -141,7 +180,12 @@ class PrefixCache:
         blocks, position-ordered, with one reference each held by the
         caller.  Ownership transfers: where a path node is created the
         caller's reference becomes the cache's; where an identical node
-        exists the duplicate block is released."""
+        exists at the CURRENT weight version the duplicate block is
+        released; where an identical node holds a STALE block (written
+        under pre-push weights) the node is refreshed in place — it
+        adopts the caller's current-version block and the cache's
+        reference on the stale one is dropped (readers that still hold
+        their own reference, e.g. a pinned session, are unaffected)."""
         bs = self.block_size
         toks = [int(t) for t in tokens]
         need = -(-len(toks) // bs) if toks else 0
@@ -156,24 +200,35 @@ class PrefixCache:
                 child = _Node(key, blocks[bi], node)
                 node.children[key] = child
                 self.stats["inserted_blocks"] += 1
-            else:
+            elif self._fresh(child):
                 self.kv.release([blocks[bi]])       # duplicate content
                 self.stats["deduped_blocks"] += 1
+            else:
+                self._refresh(child, blocks[bi])    # same tokens, new weights
             node = child
             self._touch(node)
             i += bs
             bi += 1
         rem = tuple(toks[i:])
         if rem:
-            if rem in node.children:
-                self.kv.release([blocks[bi]])
-                self.stats["deduped_blocks"] += 1
-                self._touch(node.children[rem])
-            else:
+            child = node.children.get(rem)
+            if child is None:
                 child = _Node(rem, blocks[bi], node)
                 node.children[rem] = child
                 self.stats["inserted_blocks"] += 1
-                self._touch(child)
+            elif self._fresh(child):
+                self.kv.release([blocks[bi]])
+                self.stats["deduped_blocks"] += 1
+            else:
+                self._refresh(child, blocks[bi])
+            self._touch(child)
+
+    def _refresh(self, node: _Node, block: int) -> None:
+        """Swap a stale node's block for a current-version re-derivation
+        of the same token content (the caller's reference transfers)."""
+        self.kv.release([node.block])
+        node.block = block
+        self.stats["refreshed_blocks"] += 1
 
     # ------------------------------------------------------------ eviction
     def _evictable(self, node: _Node) -> bool:
@@ -183,7 +238,9 @@ class PrefixCache:
                 and self.kv.refcount(node.block) == 1)
 
     def evict(self, n: int) -> int:
-        """Free up to ``n`` blocks, LRU leaves first; returns count freed.
+        """Free up to ``n`` blocks — stale-version leaves first (a weight
+        push made them unmatchable: pure dead weight), then LRU among
+        current-version leaves; returns count freed.
 
         A leaf is evictable only when no sequence references its block;
         removing it may expose its parent as the next candidate, so a cold
@@ -192,21 +249,31 @@ class PrefixCache:
         their last child goes, so evicting k of N cached blocks is
         O((N + k) log N), not O(k·N)."""
         import heapq
-        heap = [(nd.stamp, id(nd), nd) for nd in self._iter_nodes()
+
+        def key(nd):
+            # fresh-ness dominates recency: (False, *) = stale sorts first
+            return (self._fresh(nd), nd.stamp, id(nd))
+
+        heap = [key(nd) + (nd,) for nd in self._iter_nodes()
                 if self._evictable(nd)]
         heapq.heapify(heap)
         freed = 0
         while freed < n and heap:
-            _, _, victim = heapq.heappop(heap)
-            if not self._evictable(victim):     # stale entry: state moved on
+            entry = heapq.heappop(heap)
+            victim = entry[-1]
+            # a heap entry goes stale when the tree/refcount state (or the
+            # allocator version) moved on since it was pushed
+            if not self._evictable(victim) or entry[:-1] != key(victim):
                 continue
             parent = victim.parent
             del parent.children[victim.key]
+            if not self._fresh(victim):
+                self.stats["stale_evictions"] += 1
             self.kv.release([victim.block])
             freed += 1
             self.stats["evictions"] += 1
             if parent is not self.root and self._evictable(parent):
-                heapq.heappush(heap, (parent.stamp, id(parent), parent))
+                heapq.heappush(heap, key(parent) + (parent,))
         return freed
 
     def clear(self) -> None:

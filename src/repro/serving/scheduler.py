@@ -66,6 +66,34 @@ are rejected) and excluded for hybrid (a partial accept cannot roll back
 recurrent state).  ``stats["draft_tokens"]`` / ``stats["accepted_
 tokens"]`` / ``rolling_accept_length`` track the Table-2 quantity.
 
+Weight pushes (``push_weights``, GLM-5 §4.1.1): the trainer can hand the
+engine a new parameter snapshot AT ANY TIME without resetting the world.
+A push is applied at a DRAIN BARRIER: admission pauses, in-flight
+sequences finish under the weights they were admitted with (so no
+trajectory ever mixes versions — every ``Request`` comes back stamped
+with ``out_version``), and once the last slot retires the engine swaps
+params, bumps ``weight_version``, and resumes admitting.  The prefix
+cache is NOT reset: blocks carry the version that wrote them
+(``PagedKVCache`` stamps at alloc), admission simply refuses to alias
+older-version blocks (``PrefixCache.match``), retiring sequences refresh
+stale tree paths in place, and the LRU evictor reclaims stale blocks
+lazily — incremental invalidation, so same-version reuse is never
+sacrificed to a push.  ``AsyncFrontend`` (``repro.serving.frontend``)
+drives this from a background thread for genuinely non-blocking pushes.
+
+Speculative rollouts compose with logprob capture two ways:
+``capture_logprobs=True`` alone keeps the sampling convention (greedy
+fragments carry lp ~= 0 — the scaled-argmax logprob);
+``true_logprobs=True`` additionally records the model's TRUE
+(temperature-1) per-token logprob for every emitted token — for spec
+rounds the verified span logits are already on the host, so accepted
+drafts get exact logprobs for free.  ``step_token_budget`` adds
+accept-length-aware slot budgeting: a speculating slot burns up to
+``spec_steps+1`` tokens of step capacity, so admission holds back new
+slots once the projected per-step token emission (live slots x rolling
+accept estimate) would exceed the budget — instead of over-admitting
+slots whose ``max_new`` headroom it will burn at >1 token/step.
+
 Device layout: one block pool (``init_paged_cache``, LAYER-MAJOR flat —
 scanned layers carry it through the layer scan as a scan-invariant and
 update it in place, instead of round-tripping stacked xs/ys pools through
@@ -97,12 +125,13 @@ class _Active:
     """One in-flight sequence: its request, blocks, sampling state, and —
     while its prompt is still being chunk-prefilled — the prefill cursor."""
     __slots__ = ("req", "blocks", "out", "lps", "pending", "pending_lp",
-                 "row", "pos", "h_last")
+                 "row", "pos", "h_last", "version")
 
     def __init__(self, req: Request, blocks: List[int], row: np.ndarray,
-                 pos: int):
+                 pos: int, version: int = 0):
         self.req = req
         self.blocks = blocks
+        self.version = version               # weight version at admission
         self.out: List[int] = []
         self.lps: List[float] = []
         self.pending: Optional[int] = None   # None: prompt not fully prefilled
@@ -123,7 +152,10 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None,
                  capture_logprobs: bool = False,
                  attn_impl: Optional[str] = None,
-                 spec_steps: Optional[int] = None):
+                 spec_steps: Optional[int] = None,
+                 weight_version: int = 0,
+                 true_logprobs: bool = False,
+                 step_token_budget: Optional[int] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
                 f"ContinuousEngine supports transformer + hybrid families, "
@@ -153,9 +185,19 @@ class ContinuousEngine:
                     f"spec_steps={spec_steps} exceeds the "
                     f"{cfg.mtp.num_predict} separately-trained MTP layers "
                     f"(share_params=False has no layer to draft beyond)")
+        if true_logprobs and not capture_logprobs:
+            raise ValueError("true_logprobs=True records per-token logprobs"
+                             " and therefore needs capture_logprobs=True")
+        if step_token_budget is not None and step_token_budget < 1:
+            raise ValueError("step_token_budget must be >= 1, got "
+                             f"{step_token_budget}")
         self.spec_steps = spec_steps
         self.cfg = cfg
         self.params = params
+        self.weight_version = weight_version
+        self.true_logprobs = true_logprobs
+        self.step_token_budget = step_token_budget
+        self._pending_push: Optional[tuple] = None
         self.model = get_model(cfg)
         self.max_batch = max_batch
         self.block_size = block_size
@@ -167,6 +209,7 @@ class ContinuousEngine:
         self.table_width = self.max_blocks + \
             (-(-spec_steps // block_size) if spec_steps else 0)
         self.kv = PagedKVCache(num_blocks, block_size)
+        self.kv.set_version(weight_version)
         self.prefill_chunk = prefill_chunk
         self.capture_logprobs = capture_logprobs
         self.hybrid = cfg.family == "hybrid"
@@ -199,7 +242,10 @@ class ContinuousEngine:
                       # accepted counts; spec_rounds counts (slot, step)
                       # verifications that drafted at least one token
                       "draft_tokens": 0, "accepted_tokens": 0,
-                      "spec_rounds": 0}
+                      "spec_rounds": 0,
+                      # weight pushes applied at the drain barrier, and
+                      # admissions deferred by the step-token budget
+                      "weight_pushes": 0, "budget_deferrals": 0}
         # 'pallas' reads KV blocks in place (decode kernels at S==1, the
         # flash-prefill kernels on spans); 'ref' restores the full-view
         # gather for both phases (byte-identical greedy — the parity
@@ -357,7 +403,12 @@ class ContinuousEngine:
         return jax.tree.map(mix, ssm, old_ssm)
 
     # ------------------------------------------------------------ scheduler
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Reject requests the engine could NEVER serve (size/sampling).
+
+        Pure read of fixed engine geometry — safe from any thread, which
+        is what lets ``AsyncFrontend.submit`` fail fast on the caller's
+        thread while the serve thread owns all mutable state."""
         if self.spec_steps and req.temperature > 0:
             raise ValueError(
                 "speculative decoding is greedy-only: acceptance compares "
@@ -372,19 +423,60 @@ class ContinuousEngine:
             raise CacheFull(
                 f"request needs {blocks_for(need, self.block_size)} blocks "
                 f"> pool capacity {self.kv.num_blocks}")
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
         self.waiting.append(req)
+
+    # -------------------------------------------------------- weight pushes
+    def push_weights(self, params, version: int) -> bool:
+        """Hand the engine a new weight snapshot (same pytree structure
+        and dtypes — the trainer/rollout layer casts).
+
+        Applied at the DRAIN BARRIER: if any sequence is in flight the
+        push is deferred — admission pauses, live sequences finish under
+        their admitted weights, and the swap happens in ``step()`` the
+        moment the engine drains.  A newer deferred push replaces an
+        older one (latest snapshot wins; intermediate versions were never
+        observable anyway).  Returns True when applied immediately."""
+        if version < self.weight_version:
+            raise ValueError(f"weight versions are monotone: push {version}"
+                             f" < current {self.weight_version}")
+        pend = self._pending_push
+        if pend is not None and version < pend[1]:
+            raise ValueError(f"weight versions are monotone: push {version}"
+                             f" < pending {pend[1]}")
+        self._pending_push = (params, version)
+        return self._apply_push_if_drained()
+
+    def _apply_push_if_drained(self) -> bool:
+        if self._pending_push is None or \
+                any(s is not None for s in self.slots):
+            return False
+        params, version = self._pending_push
+        self._pending_push = None
+        self.params = params
+        self.weight_version = version
+        # existing cached blocks keep their old stamps: match() now walks
+        # past none of them, insert() refreshes hot paths, evict() takes
+        # stale blocks first — the incremental invalidation
+        self.kv.set_version(version)
+        self.stats["weight_pushes"] += 1
+        return True
 
     def serve(self, requests: List[Request]) -> List[Request]:
         for r in requests:
             self.submit(r)
         while self.waiting or any(s is not None for s in self.slots):
             self.step()
+        self._apply_push_if_drained()     # push arrived on the last step
         return requests
 
     def step(self) -> None:
-        """One iteration: retire -> admit -> chunk prefill -> batched
-        decode."""
+        """One iteration: retire -> apply drained weight push -> admit ->
+        chunk prefill -> batched decode."""
         self._retire()
+        self._apply_push_if_drained()
         self._admit()
         self._prefill_chunks()
         if self.spec_steps:
@@ -394,13 +486,28 @@ class ContinuousEngine:
         self.stats["steps"] += 1
 
     def reset_cache(self) -> None:
-        """Drop all cached prefix blocks (benchmark hygiene)."""
+        """Drop all cached prefix blocks (benchmark hygiene; weight pushes
+        do NOT need this — see ``push_weights``)."""
         if self.prefix is not None:
             self.prefix.clear()
 
     @property
+    def busy(self) -> bool:
+        """Does the engine have work for another ``step()``?  True while
+        requests wait or run, or a weight push awaits its drain barrier."""
+        return bool(self.waiting) or self._pending_push is not None \
+            or any(s is not None for s in self.slots)
+
+    @property
     def cached_blocks(self) -> int:
         return self.prefix.cached_blocks if self.prefix is not None else 0
+
+    @property
+    def stale_cached_blocks(self) -> int:
+        """Cached blocks orphaned by a weight push, awaiting lazy LRU
+        reclamation (0 when the prefix cache is off)."""
+        return self.prefix.stale_cached_blocks \
+            if self.prefix is not None else 0
 
     # --------------------------------------------------------------- retire
     def _retire(self) -> None:
@@ -413,6 +520,12 @@ class ContinuousEngine:
 
     def _finish(self, i: int) -> None:
         s = self.slots[i]
+        # the drain barrier guarantees a sequence retires under the same
+        # weights it was admitted with — the whole trajectory is one
+        # version, and that is what the TITO stamp records
+        assert s.version == self.weight_version, (s.version,
+                                                  self.weight_version)
+        s.req.out_version = s.version
         s.req.out = np.asarray(s.out[:s.req.max_new], np.int32)
         if self.capture_logprobs:
             s.req.out_logprobs = np.asarray(s.lps[:s.req.max_new],
@@ -436,10 +549,35 @@ class ContinuousEngine:
 
     # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
+        if self._pending_push is not None:
+            return          # draining toward the weight-push barrier
         while self.waiting and None in self.slots:
+            if not self._step_budget_allows():
+                self.stats["budget_deferrals"] += 1
+                return
             if not self._try_admit(self.waiting[0]):
                 return
             self.waiting.popleft()
+
+    def _step_budget_allows(self) -> bool:
+        """Accept-length-aware slot budgeting (``step_token_budget``).
+
+        Every live slot emits up to ``spec_steps + 1`` tokens per step;
+        admission projects the per-step emission of ``live + 1`` slots at
+        the rolling accept-length estimate (the conservative
+        ``spec_steps + 1`` until a measurement exists) and defers when it
+        would exceed the budget.  The first slot is always admitted —
+        a budget can shape concurrency, never deadlock the engine."""
+        if self.step_token_budget is None:
+            return True
+        live = sum(1 for s in self.slots if s is not None)
+        if live == 0:
+            return True
+        per_slot = 1.0
+        if self.spec_steps:
+            est = self.rolling_accept_length
+            per_slot = est if est > 0 else float(self.spec_steps + 1)
+        return (live + 1) * per_slot <= self.step_token_budget
 
     def _try_admit(self, req: Request) -> bool:
         bs = self.block_size
@@ -481,13 +619,19 @@ class ContinuousEngine:
         else:
             blocks = mblocks + fresh
 
+        # version-tag invariant: every aliased block was written under the
+        # CURRENT weights (match() refuses older stamps; fresh allocations
+        # are stamped now, and the drain barrier keeps this version live
+        # until the sequence retires)
+        assert all(self.kv.block_version(b) == self.weight_version
+                   for b in blocks), "stale block aliased into admission"
         slot = self.slots.index(None)
         row = np.full((self.table_width,), self.trash, np.int32)
         row[:len(blocks)] = blocks
         if self.hybrid:
             self.pool = self._ssm_reset(self.pool,
                                         jnp.asarray(slot, jnp.int32))
-        s = _Active(req, blocks, row, pos=m)
+        s = _Active(req, blocks, row, pos=m, version=self.weight_version)
         self.slots[slot] = s
         self.stats["prefills"] += 1
         self.stats["cached_tokens"] += m
@@ -726,6 +870,15 @@ class ContinuousEngine:
         tok = sample_token(row, temperature, self._rng)
         if not self.capture_logprobs:
             return tok, 0.0
+        if self.true_logprobs:
+            # the model's TRUE (temperature-1) logprob of the emitted
+            # token — beyond the greedy-lp convention: a greedy rollout
+            # still yields exact behavior logprobs for distillation / IS.
+            # Spec rounds get these for free from the verified span
+            # logits (every accepted position's row is already on host).
+            z = row - row.max()
+            lp = float(z[tok] - np.log(np.exp(z).sum()))
+            return tok, lp
         # same convention as RolloutEngine.generate (logits / max(t, 1e-6)):
         # greedy fragments carry lp ~= 0 for the argmax token, so engine-
         # backed and loop-backed behavior logprobs are comparable in the IS

@@ -1,0 +1,542 @@
+"""Async front-end + version-tagged KV blocks (PR-6 tentpole).
+
+Covers the acceptance criteria:
+  * greedy outputs byte-identical through ``AsyncFrontend`` submit/result
+    vs the blocking ``serve()`` oracle at a fixed weight version, for the
+    GQA, DSA, and MLA families — including prefix-cache hits (a request
+    extending a cached prompt) and ``spec_steps > 0``;
+  * weight pushes mid-run: a request admitted before the push drains AT
+    ITS ADMITTED VERSION (``out_version`` stamps, outputs match the OLD
+    weights' oracle), later submissions run under the new weights and
+    match the NEW oracle — no trajectory ever mixes versions, and the
+    prefix cache is NOT reset (blocks refresh in place / age out lazily);
+  * version-tag invariants at the allocator/radix layer: a block written
+    at version v is never aliased into a v' > v forward (``match``
+    refuses), ``insert`` refreshes stale nodes in place, ``evict`` takes
+    stale leaves first, and refcounts/free-list are conserved across the
+    whole incremental-invalidation life cycle;
+  * heartbeat regressions: a crashed ``Orchestrator`` worker deregisters
+    itself (no zombie in the table, ``wait_for_groups`` raises instead of
+    spinning out its timeout) and a slow group beats BETWEEN rollouts so
+    healthy workers are not falsely evicted;
+  * spec-decode composition satellites: ``true_logprobs`` records the
+    exact temperature-1 logprob of every emitted token from the verified
+    span logits (spec on == spec off), and the accept-length-aware
+    ``step_token_budget`` defers admissions without changing outputs;
+  * ``async_rl`` wiring: ``RolloutEngine.generate_batch`` streams through
+    the front-end recording per-request version stamps across a push, and
+    the ``Orchestrator`` serving backend drives whole GRPO groups through
+    the shared front-end.
+"""
+import functools
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.async_rl.heartbeat import HeartbeatMonitor
+from repro.async_rl.orchestrator import Orchestrator, TaskService
+from repro.async_rl.rollout import RolloutEngine
+from repro.async_rl.tito import TitoGateway
+from repro.configs import get_smoke_config
+from repro.configs.base import DSAConfig, MTPConfig
+from repro.models import get_model
+from repro.serving import (AgentSession, AsyncFrontend, AsyncSession,
+                           ContinuousEngine, FrontendClosed, PagedKVCache,
+                           PrefixCache, Request)
+
+_KW = dict(max_batch=4, block_size=8, num_blocks=64, max_len=64)
+_MTP = MTPConfig(num_predict=3, share_params=True)
+
+
+def _family_cfg(name):
+    if name in ("gqa", "dsa"):
+        return get_smoke_config("yi_6b").replace(
+            d_model=128, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+            vocab_size=256, mtp=_MTP,
+            dsa=DSAConfig(index_heads=2, index_head_dim=16, top_k=32,
+                          block_size=16) if name == "dsa" else None)
+    return get_smoke_config("glm5_744b").replace(            # mla
+        d_model=128, num_heads=2, num_kv_heads=2, d_ff=256,
+        vocab_size=256, num_experts=0, num_shared_experts=0, mtp=_MTP,
+        first_k_dense=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _family_params(name):
+    cfg = _family_cfg(name)
+    return cfg, get_model(cfg).init(jax.random.key(0), cfg)[0]
+
+
+def _workload(cfg):
+    """3 prompts sharing one block-aligned system prefix + 1 extension of
+    the first prompt (radix hit, possibly mid-block COW)."""
+    rng = np.random.default_rng(5)
+    sys_p = rng.integers(3, cfg.vocab_size, size=8)
+    base = [np.concatenate([sys_p, rng.integers(3, cfg.vocab_size, size=k)])
+            .astype(np.int32) for k in (3, 5, 9)]
+    ext = np.concatenate([base[0], [7, 9, 11]]).astype(np.int32)
+    return base + [ext]
+
+
+def _serve_blocking(cfg, params, **kw):
+    """Blocking oracle: serve the workload in two waves so the extension
+    request actually hits the cache the first wave populated."""
+    eng = ContinuousEngine(cfg, params, capture_logprobs=True,
+                           true_logprobs=True, **dict(_KW, **kw))
+    prompts = _workload(cfg)
+    reqs = [Request(prompt=p, max_new=6) for p in prompts]
+    eng.serve(reqs[:3])
+    eng.serve(reqs[3:])
+    return [r.out for r in reqs], [r.out_logprobs for r in reqs], eng
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle(name):
+    cfg, params = _family_params(name)
+    outs, lps, eng = _serve_blocking(cfg, params)
+    assert eng.stats["cached_tokens"] > 0          # the hit actually hit
+    return outs, lps
+
+
+def _await_admitted(fe, handles, deadline_s=120.0):
+    """Wait until each handle streamed >= 1 token: admitted (blocks
+    allocated, cache matched) at the engine's CURRENT version."""
+    t0 = time.time()
+    while not all(p.done or len(p.tokens) > 0
+                  for p in (fe.poll(h) for h in handles)):
+        if time.time() - t0 > deadline_s:
+            raise TimeoutError("requests never admitted")
+        time.sleep(0.002)
+
+
+def _await_version(fe, version, deadline_s=120.0):
+    t0 = time.time()
+    while fe.version < version:
+        if time.time() - t0 > deadline_s:
+            raise TimeoutError(f"push to v{version} never applied")
+        time.sleep(0.002)
+
+
+# ---------------------------------------------------------------------------
+# front-end parity vs the blocking oracle (fixed version), all families,
+# prefix-cache hits + speculative decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["gqa", "dsa", "mla"])
+def test_frontend_parity_with_spec_and_cache_hits(family):
+    cfg, params = _family_params(family)
+    fe = AsyncFrontend(ContinuousEngine(cfg, params, spec_steps=2, **_KW))
+    try:
+        prompts = _workload(cfg)
+        hs = [fe.submit(p, max_new=6) for p in prompts[:3]]
+        fe.flush()                      # wave 2 must see wave 1's cache
+        hs.append(fe.submit(prompts[3], max_new=6))
+        outs = [fe.result(h).out for h in hs]
+        for a, b in zip(_oracle(family)[0], outs):
+            np.testing.assert_array_equal(a, b)
+        stats = fe.stats
+        assert stats["spec_rounds"] > 0             # speculation ran
+        assert stats["cached_tokens"] > 0           # the radix hit hit
+    finally:
+        fe.close()
+
+
+def test_frontend_poll_streams_monotonic_prefix():
+    cfg, params = _family_params("gqa")
+    fe = AsyncFrontend(ContinuousEngine(cfg, params, **_KW))
+    try:
+        h = fe.submit(_workload(cfg)[2], max_new=6)
+        seen = []
+        while True:
+            p = fe.poll(h)
+            assert list(p.tokens[:len(seen)]) == seen   # prefix-stable
+            seen = list(p.tokens)
+            if p.done:
+                break
+            time.sleep(0.002)
+        req = fe.result(h)
+        assert seen == list(req.out) and req.out_version == 0
+        # caller-side fail-fast: impossible request never reaches the
+        # serve thread
+        with pytest.raises(ValueError):
+            fe.submit(np.zeros(2 * _KW["max_len"], np.int32), max_new=4)
+    finally:
+        fe.close()
+    with pytest.raises(FrontendClosed):
+        fe.submit([1, 2, 3], max_new=2)
+
+
+# ---------------------------------------------------------------------------
+# weight pushes through the front-end: admitted-version drain, new-version
+# pickup, incremental (not reset) cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_push_mid_run_versions_and_cache_survival():
+    cfg, params_a = _family_params("gqa")
+    params_b = get_model(cfg).init(jax.random.key(7), cfg)[0]
+    prompts = _workload(cfg)
+    oracle_a = _oracle("gqa")[0]
+    outs_b, _, _ = _serve_blocking(cfg, params_b)   # new-weights oracle
+
+    fe = AsyncFrontend(ContinuousEngine(cfg, params_a, weight_version=0,
+                                        **_KW))
+    try:
+        # wave 1 at v0 builds the cache
+        hs = [fe.submit(p, max_new=6) for p in prompts[:3]]
+        r1 = [fe.result(h) for h in hs]
+        assert all(r.out_version == 0 for r in r1)
+
+        # wave 2 admitted at v0, push lands while it is IN FLIGHT: the
+        # drain barrier finishes it under the admitted weights
+        hs = [fe.submit(p, max_new=6) for p in prompts[:3]]
+        _await_admitted(fe, hs)
+        fe.push_weights(params_b, 1)
+        r2 = [fe.result(h) for h in hs]
+        assert all(r.out_version == 0 for r in r2)
+        for a, r in zip(oracle_a, r2):
+            np.testing.assert_array_equal(a, r.out)   # OLD weights' output
+        _await_version(fe, 1)
+
+        # the push must NOT have reset the cache: v0 blocks still cached
+        # (stale, awaiting lazy eviction), tree non-empty throughout
+        snap = {}
+        fe.call(lambda: snap.update(
+            cached=fe.engine.prefix.cached_blocks,
+            stale=fe.engine.prefix.stale_cached_blocks))
+        assert snap["cached"] > 0 and snap["stale"] > 0
+
+        # wave 3 under the new weights: new-oracle parity, fresh stamps,
+        # stale paths refused then refreshed in place
+        hs = [fe.submit(p, max_new=6) for p in prompts[:3]]
+        hs.append(fe.submit(prompts[3], max_new=6))
+        r3 = [fe.result(h) for h in hs]
+        assert all(r.out_version == 1 for r in r3)
+        for b, r in zip(outs_b, r3):
+            np.testing.assert_array_equal(b, r.out)   # NEW weights' output
+        stats = fe.stats
+        assert stats["weight_pushes"] == 1
+        pstats, kvstate = {}, {}
+        fe.call(lambda: (pstats.update(fe.engine.prefix.stats),
+                         kvstate.update(
+                             free=fe.engine.kv.free_blocks,
+                             used=fe.engine.kv.used_blocks,
+                             total=fe.engine.kv.num_blocks,
+                             refs=[fe.engine.kv.refcount(n.block) for n in
+                                   fe.engine.prefix._iter_nodes()])))
+        assert pstats["version_refused"] > 0
+        assert pstats["refreshed_blocks"] > 0
+        # refcount conservation across the whole push cycle: the pool
+        # adds up and idle cached blocks are held only by the tree
+        assert kvstate["free"] + kvstate["used"] == kvstate["total"]
+        assert all(r == 1 for r in kvstate["refs"])
+    finally:
+        fe.close()
+
+
+def test_async_session_across_push():
+    cfg, params_a = _family_params("gqa")
+    msgs = [np.asarray(m, np.int32) for m in
+            ([5, 6, 7, 8, 9], [10, 11, 12], [13, 14, 15, 16])]
+
+    blocking = ContinuousEngine(cfg, params_a, **_KW)
+    sess_o = AgentSession(blocking)
+    oracle = [sess_o.send(m, max_new=4) for m in msgs]
+    sess_o.close()
+
+    fe = AsyncFrontend(ContinuousEngine(cfg, params_a, **_KW))
+    try:
+        sess = AsyncSession(fe)
+        replies = [None] * len(msgs)
+        sess.send(msgs[0], max_new=4)
+        replies[0] = sess.result()
+        assert sess.last_turn["version"] == 0
+        assert sess.pinned_blocks > 0               # conversation pinned
+        # same numeric weights under a bumped version: the session must
+        # re-prefill under v1 (its pinned v0 blocks went stale) and keep
+        # producing the oracle's replies
+        fe.push_weights(params_a, 1)
+        _await_version(fe, 1)
+        for i in (1, 2):
+            sess.send(msgs[i], max_new=4)
+            replies[i] = sess.result()
+        assert sess.last_turn["version"] == 1
+        for a, b in zip(oracle, replies):
+            np.testing.assert_array_equal(a, b)
+        sess.close()
+        assert sess.pinned_blocks == 0
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# version-tag invariants at the allocator / radix layer (no model)
+# ---------------------------------------------------------------------------
+
+def test_block_version_stamps_and_match_refusal():
+    kv = PagedKVCache(num_blocks=16, block_size=4)
+    cache = PrefixCache(kv)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    cache.insert(toks, kv.alloc(2))
+    assert all(kv.block_version(n.block) == 0
+               for n in cache._iter_nodes())
+    m, bs = cache.match(toks)
+    assert m == 8
+    kv.release(bs)
+
+    kv.set_version(1)                    # the push
+    assert kv.stale_blocks() == 2 and cache.stale_cached_blocks == 2
+    m, bs = cache.match(toks)            # v0 KV never aliased at v1
+    assert m == 0 and bs == []
+    assert cache.stats["version_refused"] == 1
+    # partial-overlap path refuses stale children too
+    m, bs = cache.match([1, 2, 3, 9])
+    assert m == 0 and bs == []
+
+    with pytest.raises(ValueError):      # versions are monotone
+        kv.set_version(0)
+
+
+def test_insert_refreshes_stale_nodes_in_place():
+    kv = PagedKVCache(num_blocks=16, block_size=4)
+    cache = PrefixCache(kv)
+    toks = [1, 2, 3, 4, 5, 6]
+    cache.insert(toks, kv.alloc(2))
+    kv.set_version(2)
+    # a sequence re-derives the same tokens under the new weights: the
+    # stale nodes adopt the new blocks, no duplicate tree paths appear
+    fresh = kv.alloc(2)
+    cache.insert(toks, fresh)
+    assert cache.stats["refreshed_blocks"] == 2
+    assert cache.cached_blocks == 2 and cache.stale_cached_blocks == 0
+    assert kv.stale_blocks() == 0        # stale blocks were released
+    m, bs = cache.match(toks)
+    assert m == 6 and bs == fresh
+    kv.release(bs)
+    # conservation: 2 cached blocks, each held once, pool adds up
+    assert kv.used_blocks == 2 and kv.free_blocks == 14
+    assert all(kv.refcount(b) == 1 for b in fresh)
+
+
+def test_evict_takes_stale_leaves_first():
+    kv = PagedKVCache(num_blocks=16, block_size=4)
+    cache = PrefixCache(kv)
+    cache.insert([1, 2, 3, 4], kv.alloc(1))        # will go stale
+    kv.set_version(1)
+    cache.insert([9, 9, 9, 9], kv.alloc(1))        # fresh, older stamp
+    cache.insert([8, 8, 8, 8], kv.alloc(1))        # fresh, newest stamp
+    assert cache.evict(1) == 1
+    assert cache.stats["stale_evictions"] == 1     # stale went first...
+    assert cache.stale_cached_blocks == 0
+    assert cache.evict(1) == 1                     # ...then LRU: [9,...]
+    assert cache.stats["stale_evictions"] == 1
+    m, bs = cache.match([8, 8, 8, 8])
+    assert m == 4
+    kv.release(bs)
+
+
+# ---------------------------------------------------------------------------
+# spec-decode composition satellites: true logprobs + step-token budget
+# ---------------------------------------------------------------------------
+
+def test_true_logprobs_spec_parity():
+    cfg, params = _family_params("gqa")
+    outs0, lps0 = _oracle("gqa")                   # spec off, true lps
+    # random tiny model, vocab 256: a REAL temperature-1 logprob is far
+    # from the legacy greedy-lp convention (lp == 0 at the argmax)
+    assert np.mean(np.concatenate(lps0)) < -0.5
+    assert all(np.all(lp <= 1e-6) for lp in lps0)
+    outs3, lps3, eng = _serve_blocking(cfg, params, spec_steps=3)
+    assert eng.stats["accepted_tokens"] > 0
+    for a, b in zip(outs0, outs3):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(lps0, lps3):                   # accepted tokens carry
+        np.testing.assert_allclose(a, b, atol=1e-3)    # their TRUE lps
+
+
+def test_true_logprobs_requires_capture():
+    cfg, params = _family_params("gqa")
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params, true_logprobs=True, **_KW)
+
+
+def test_step_token_budget_defers_without_changing_outputs():
+    cfg, params = _family_params("gqa")
+    # projected emission (live+1) * (spec_steps+1) overshoots the budget
+    # until the rolling accept length is measured — admissions defer, the
+    # first slot is always admitted (no deadlock), outputs are untouched
+    outs, _, eng = _serve_blocking(cfg, params, spec_steps=3,
+                                   max_batch=2, step_token_budget=5)
+    assert eng.stats["budget_deferrals"] > 0
+    for a, b in zip(_oracle("gqa")[0], outs):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat regressions (no model: stub engine)
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    """Duck-typed RolloutEngine: enough for the Orchestrator 'loop'
+    backend without touching jax."""
+
+    def __init__(self, delay_s: float = 0.0):
+        self.gateway = TitoGateway()
+        self.version = 0
+        self.delay_s = delay_s
+
+    def generate(self, rid, prompt, max_new, **kw):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        toks = (np.arange(max_new, dtype=np.int32) % 5) + 3
+        self.gateway.record(rid, toks, np.zeros(max_new, np.float32),
+                            self.version)
+        return toks
+
+
+def _task(reward):
+    return TaskService(
+        name="t",
+        sample_problem=lambda rng: {"prompt": np.asarray([1, 2, 3],
+                                                         np.int32)},
+        reward=reward, max_new=4)
+
+
+def test_heartbeat_deregister():
+    mon = HeartbeatMonitor(timeout_s=0.05)
+    mon.register("s0")
+    mon.register("s1")
+    mon.deregister("s0")
+    assert mon.healthy_servers() == ["s1"]
+    time.sleep(0.08)
+    mon.beat("s1")
+    assert mon.sweep() == []             # s0 gone, not a zombie eviction
+    assert mon.evictions == []
+
+
+def test_crashed_worker_deregisters_and_wait_raises():
+    orch = Orchestrator([_StubEngine()], group_size=2)
+    orch.register(_task(lambda prob, gen: (_ for _ in ()).throw(
+        RuntimeError("reward service down"))))
+    orch.start(n_workers=2)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="rollout workers crashed"):
+        orch.wait_for_groups(1, timeout_s=60)
+    assert time.monotonic() - t0 < 30    # raised, did not spin to timeout
+    assert len(orch.worker_errors) == 2
+    # no zombies: crashed workers removed themselves from the table
+    assert orch.monitor.healthy_servers() == []
+    assert orch.monitor.sweep() == []
+    orch.stop()
+
+
+def test_group_beats_between_rollouts():
+    orch = Orchestrator([_StubEngine(delay_s=0.02)], group_size=4)
+    orch.monitor = HeartbeatMonitor(timeout_s=0.05)
+    orch.register(_task(lambda prob, gen: (1.0, False)))
+    sid = "rollout-worker-0"
+    orch.monitor.register(sid)
+    rng = np.random.default_rng(0)
+    beats = []
+
+    def beat():
+        beats.append(time.monotonic())
+        orch.monitor.beat(sid)
+        # a sweep mid-group (as wait_for_groups runs them) must not evict
+        # a worker that is merely between rollouts of a slow group
+        assert orch.monitor.sweep() == []
+
+    orch._rollout_group(rng, beat=beat)  # 4 x 20ms > the 50ms timeout
+    assert len(beats) == orch.group_size
+    assert orch.monitor.is_healthy(sid)
+    assert orch.buffer.n_ready() == 1
+
+
+def test_wait_for_groups_happy_path_still_returns():
+    orch = Orchestrator([_StubEngine()], group_size=2)
+    orch.register(_task(lambda prob, gen: (1.0, False)))
+    orch.start(n_workers=1)
+    assert orch.wait_for_groups(1, timeout_s=60)
+    orch.stop()
+
+
+# ---------------------------------------------------------------------------
+# async_rl wiring: generate_batch / orchestrator through the front-end
+# ---------------------------------------------------------------------------
+
+def test_generate_batch_stamps_per_request_versions_across_push():
+    cfg, params = _family_params("gqa")
+    eng = RolloutEngine(cfg, params, seed=3)
+    kw = dict(max_batch=4, block_size=8, num_blocks=64, max_len=64)
+    sys_p = np.asarray([4, 5, 6, 7, 8, 9, 10, 11], np.int32)
+    prompts = [np.concatenate([sys_p, [20 + i]]).astype(np.int32)
+               for i in range(3)]
+    try:
+        rids = [eng.gateway.new_rollout("t") for _ in prompts]
+        outs = eng.generate_batch(rids, prompts, max_new=4,
+                                  temperature=0.0, **kw)
+        trajs = [eng.gateway.finish(r, "t", p, 1.0)
+                 for r, p in zip(rids, prompts)]
+        assert all(t.versions == [0] for t in trajs)
+        for t, o in zip(trajs, outs):
+            np.testing.assert_array_equal(t.tokens, o)
+            assert t.logprobs.shape == t.tokens.shape
+
+        eng.push_weights(params, 3)      # same values, new version
+        rids = [eng.gateway.new_rollout("t") for _ in prompts]
+        outs2 = eng.generate_batch(rids, prompts, max_new=4,
+                                   temperature=0.0, **kw)
+        trajs = [eng.gateway.finish(r, "t", p, 1.0)
+                 for r, p in zip(rids, prompts)]
+        assert all(t.versions == [3] for t in trajs)
+        for a, b in zip(outs, outs2):    # identical weights => identical
+            np.testing.assert_array_equal(a, b)
+
+        # a third batch at the SAME version aliases the cache the second
+        # batch refreshed after the push — the no-reset payoff
+        rids = [eng.gateway.new_rollout("t") for _ in prompts]
+        outs3 = eng.generate_batch(rids, prompts, max_new=4,
+                                   temperature=0.0, **kw)
+        for a, b in zip(outs, outs3):
+            np.testing.assert_array_equal(a, b)
+        stats = eng.serving_engine(**kw).stats
+        assert stats["weight_pushes"] == 1
+        assert stats["cached_tokens"] > 0          # shared sys prefix
+        with pytest.raises(ValueError):            # geometry stays fixed
+            eng.serving_engine(max_batch=2, block_size=8, num_blocks=64,
+                               max_len=64)
+    finally:
+        if eng._frontend is not None:
+            eng._frontend.close()
+
+
+def test_orchestrator_serving_backend_runs_groups():
+    cfg, params = _family_params("gqa")
+    eng = RolloutEngine(cfg, params, seed=1)
+    kw = dict(max_batch=4, block_size=8, num_blocks=64, max_len=64)
+    orch = Orchestrator([eng], group_size=2, backend="serving",
+                        serving_kw=kw)
+    prompt = np.asarray([3, 4, 5, 6], np.int32)
+    orch.register(TaskService(
+        name="t", sample_problem=lambda rng: {"prompt": prompt},
+        reward=lambda prob, gen: (float(len(gen)), False), max_new=4))
+    try:
+        orch.start(n_workers=2)
+        assert orch.wait_for_groups(1, timeout_s=300), orch.worker_errors
+    finally:
+        orch.stop()
+        if eng._frontend is not None:
+            eng._frontend.close()
+    group = orch.buffer.pop_groups(1)[0]
+    assert len(group) == orch.group_size
+    for t in group:
+        assert t.versions == [0] and len(t.tokens) == 4
+        assert t.logprobs.shape == t.tokens.shape
+    assert eng.serving_engine(**kw).stats["prefills"] >= 2
+
+
+def test_orchestrator_rejects_unknown_backend():
+    with pytest.raises(ValueError):
+        Orchestrator([_StubEngine()], backend="telepathy")

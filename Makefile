@@ -22,14 +22,17 @@ bench-serving:
 # its measured accept length (byte-identical greedy asserted inside), and
 # async_frontend BOTH prefill-tokens-saved > 0 across straddled weight
 # pushes (the cache must survive a push) and the >=1.2x tok/s bar for
-# multiplexed vs serialized groups.
+# multiplexed vs serialized groups.  Each invocation merges its rows +
+# registry snapshot into BENCH_smoke.json (machine-readable artifact).
+BENCH_JSON ?= BENCH_smoke.json
 bench-smoke:
-	$(PY) -m benchmarks.run --only serving_throughput --fast
-	$(PY) -m benchmarks.run --only prefix_cache --fast
-	$(PY) -m benchmarks.run --only paged_decode --fast
-	$(PY) -m benchmarks.run --only paged_prefill --fast
-	$(PY) -m benchmarks.run --only speculative_decode --fast
-	$(PY) -m benchmarks.run --only async_frontend --fast
+	rm -f $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only serving_throughput --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only prefix_cache --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only paged_decode --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only paged_prefill --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only speculative_decode --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only async_frontend --fast --json $(BENCH_JSON)
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -185,6 +185,7 @@ def run(fast: bool = False, **kw):
         hs0 = [fe.submit(p, max_new=max_new) for p in wgroups[0]]
         [fe.result(h) for h in hs0]                  # warm-up: compile
         fe.call(fe.engine.reset_cache)
+        fe.registry.reset_histograms("engine")       # drop warm-up latencies
         # completion times stamped by the on_finish hook ON the serve
         # thread, right at retirement — no client-side polling skew
         done_t: Dict[int, float] = {}
@@ -196,11 +197,17 @@ def run(fast: bool = False, **kw):
                    for w, grp in enumerate(wgroups)]
         outs = [[fe.result(h).out for h in hs] for hs in handles]
         done = [max(done_t[(w, g)] for g in range(Gn)) for w in range(W)]
+        # live latency percentiles for the multiplexed cohort: TTFT here
+        # includes queue time on the serve thread (t_submit is stamped on
+        # the CLIENT thread at submit), which is exactly the number the
+        # blocking path hides by serializing whole groups
+        lat = fe.latency_summary()
+        snap = fe.registry.snapshot()
         fe.close()
-        return done, outs
+        return done, outs, lat, snap
 
     done_b, outs_b = run_blocking()
-    done_f, outs_f = run_frontend()
+    done_f, outs_f, lat, snap = run_frontend()
     for gb, gf in zip(outs_b, outs_f):
         for a, b in zip(gb, gf):
             np.testing.assert_array_equal(a, b)
@@ -218,6 +225,18 @@ def run(fast: bool = False, **kw):
                     f"speedup={speedup:.2f}x (bar: >=1.2x); "
                     f"first group {min(done_f) * 1e3:.0f}ms vs "
                     f"{min(done_b) * 1e3:.0f}ms blocking"),
+    })
+    ttft, tpot = lat["ttft_ms"], lat["tpot_ms"]
+    rows.append({
+        "name": "async_frontend/latency",
+        "us_per_call": ttft["mean"] * 1e3,
+        "derived": (f"live TTFT p50/p95/p99 = {ttft['p50']:.1f}/"
+                    f"{ttft['p95']:.1f}/{ttft['p99']:.1f} ms; "
+                    f"TPOT p50/p95/p99 = {tpot['p50']:.2f}/"
+                    f"{tpot['p95']:.2f}/{tpot['p99']:.2f} ms "
+                    f"(n={int(ttft['count'])} concurrent requests; "
+                    f"submit stamped on client thread)"),
+        "registry": snap,
     })
     return rows
 

@@ -72,15 +72,21 @@ def run(fast: bool = False, **kw):
         eng.serve(_clone(reqs))                  # warm-up: compile
         eng.stats = {k: [] if isinstance(v, list) else 0
                      for k, v in eng.stats.items()}   # count timed run only
+        eng.registry.reset_histograms("engine")  # drop warm-up latencies
         t0 = time.time()
         eng.serve(_clone(reqs))
-        return time.time() - t0, eng.stats
+        return time.time() - t0, eng
 
     st = time_static()
-    ct, stats = time_continuous()
+    ct, eng = time_continuous()
+    stats = eng.stats
     tps_static = total_tokens / st
     tps_cont = total_tokens / ct
     speedup = tps_cont / tps_static
+    # live per-request latency percentiles, measured by the engine's own
+    # clock stamps through the metrics registry (NOT the pd_sim model)
+    lat = eng.latency_summary()
+    ttft, tpot = lat["ttft_ms"], lat["tpot_ms"]
     return [{
         "name": "serving_throughput/static",
         "us_per_call": st * 1e6,
@@ -91,6 +97,15 @@ def run(fast: bool = False, **kw):
         "derived": (f"{tps_cont:.1f} tok/s, speedup={speedup:.2f}x "
                     f"(bar: >=1.3x), decode_steps={stats['decode_steps']}, "
                     f"prefills={stats['prefills']}"),
+    }, {
+        "name": "serving_throughput/latency",
+        "us_per_call": ttft["mean"] * 1e3,
+        "derived": (f"live TTFT p50/p95/p99 = {ttft['p50']:.1f}/"
+                    f"{ttft['p95']:.1f}/{ttft['p99']:.1f} ms; "
+                    f"TPOT p50/p95/p99 = {tpot['p50']:.2f}/"
+                    f"{tpot['p95']:.2f}/{tpot['p99']:.2f} ms "
+                    f"(n={int(ttft['count'])} requests)"),
+        "registry": eng.registry.snapshot(),
     }]
 
 

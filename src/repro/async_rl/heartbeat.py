@@ -10,21 +10,35 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.metrics import MetricsRegistry
+
 
 class HeartbeatMonitor:
     def __init__(self, timeout_s: float = 2.0,
-                 on_evict: Optional[Callable[[str], None]] = None):
+                 on_evict: Optional[Callable[[str], None]] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.timeout_s = timeout_s
         self._last: Dict[str, float] = {}
         self._healthy: Dict[str, bool] = {}
         self._lock = threading.Lock()
         self._on_evict = on_evict
         self.evictions: List[str] = []
+        # beat-age histogram + eviction counter + healthy gauge land in
+        # the orchestrator's shared registry: a lapsing server shows up
+        # as a fat beat-age tail BEFORE it crosses timeout_s
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.registry.set_gauge("heartbeat.healthy_servers", 0)
+
+    def _sync_gauge_locked(self) -> None:
+        self.registry.set_gauge(
+            "heartbeat.healthy_servers",
+            sum(1 for ok in self._healthy.values() if ok))
 
     def register(self, server_id: str):
         with self._lock:
             self._last[server_id] = time.monotonic()
             self._healthy[server_id] = True
+            self._sync_gauge_locked()
 
     def deregister(self, server_id: str):
         """Drop a server from the table entirely — clean shutdown, or a
@@ -36,6 +50,7 @@ class HeartbeatMonitor:
         with self._lock:
             self._last.pop(server_id, None)
             self._healthy.pop(server_id, None)
+            self._sync_gauge_locked()
 
     def beat(self, server_id: str):
         with self._lock:
@@ -48,11 +63,18 @@ class HeartbeatMonitor:
         evicted = []
         with self._lock:
             for sid, ok in list(self._healthy.items()):
-                if ok and now - self._last[sid] > self.timeout_s:
+                if not ok:
+                    continue
+                age = now - self._last[sid]
+                self.registry.observe("heartbeat.beat_age_ms", age * 1e3)
+                if age > self.timeout_s:
                     self._healthy[sid] = False
                     evicted.append(sid)
+            if evicted:
+                self._sync_gauge_locked()
         for sid in evicted:
             self.evictions.append(sid)
+            self.registry.inc("heartbeat.evictions")
             if self._on_evict:
                 self._on_evict(sid)
         return evicted

@@ -53,10 +53,21 @@ class Orchestrator:
         self.gateway = engines[0].gateway
         for e in engines[1:]:
             e.gateway = self.gateway
+        # ...and the metrics registry likewise: rollout durations, beat
+        # ages, and group latencies from every engine/worker aggregate
+        # into one snapshot (getattr: engine test doubles need not carry
+        # one — the orchestrator then keeps its own)
+        from repro.obs.metrics import MetricsRegistry
+        self.registry = getattr(engines[0], "registry", None)
+        if self.registry is None:
+            self.registry = MetricsRegistry()
+        for e in engines[1:]:
+            e.registry = self.registry
         self.buffer = TrajectoryBuffer(group_size, staleness_tau)
         self.group_size = group_size
         self.router = DPRouter(n_ranks=len(engines))
-        self.monitor = HeartbeatMonitor(timeout_s=5.0)
+        self.monitor = HeartbeatMonitor(timeout_s=5.0,
+                                        registry=self.registry)
         self.tasks: Dict[str, TaskService] = {}
         self._rng = np.random.default_rng(seed)
         self._stop = threading.Event()
@@ -100,6 +111,7 @@ class Orchestrator:
         task = self._pick_task()
         problem = task.sample_problem(worker_rng)
         gkey = f"{task.name}-g{next(self._group_ids)}"
+        t_group = time.perf_counter()
         for _ in range(self.group_size):
             if beat is not None:
                 beat()
@@ -119,6 +131,11 @@ class Orchestrator:
                                        reward, env_failure=env_fail or fail)
             self.router.finish(rid)
             self.buffer.add(gkey, traj, self.current_version())
+        # group wall time is the §4.1.1 straggler signal: one stuck
+        # rollout inflates the p99 here long before throughput moves
+        self.registry.observe("orchestrator.group_ms",
+                              (time.perf_counter() - t_group) * 1e3)
+        self.registry.inc("orchestrator.groups")
         with self._lock:
             self.completed += self.group_size
 

@@ -34,6 +34,7 @@ Two generation paths:
 from __future__ import annotations
 
 import threading
+import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -43,14 +44,21 @@ import numpy as np
 from repro.async_rl.tito import TitoGateway
 from repro.configs.base import ModelConfig
 from repro.models import get_model
+from repro.obs.metrics import MetricsRegistry
 
 
 class RolloutEngine:
     def __init__(self, cfg: ModelConfig, params, *, engine_dtype=jnp.bfloat16,
-                 seed: int = 0, gateway: Optional[TitoGateway] = None):
+                 seed: int = 0, gateway: Optional[TitoGateway] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.model = get_model(cfg)
         self.engine_dtype = engine_dtype
+        # shared with the serving engine under the front-end (rollout
+        # durations, weight-push staleness, and the engine's TTFT/TPOT
+        # histograms land in ONE snapshot — GLM-4.5/5-style slow-rollout
+        # detection needs them side by side)
+        self.registry = registry if registry is not None else MetricsRegistry()
         self._lock = threading.Lock()
         self.version = 0
         self._params = jax.tree.map(lambda x: x.astype(engine_dtype), params)
@@ -99,6 +107,7 @@ class RolloutEngine:
         (tokens + rollout logprobs + weight version) through the TITO
         gateway.  Weight pushes between fragments are picked up mid-
         trajectory — that's the async off-policy condition."""
+        t_start = time.perf_counter()
         buf_len = len(prompt) + max_new
         # round up to a small set of bucket lengths -> few compiles
         bucket = 16
@@ -132,7 +141,21 @@ class RolloutEngine:
         if frag_toks:
             self.gateway.record(rollout_id, np.array(frag_toks),
                                 np.array(frag_lps), version)
+        self._observe_rollout(t_start, len(out), version)
         return np.asarray(out, np.int32)
+
+    def _observe_rollout(self, t_start: float, n_tokens: int,
+                         version: int) -> None:
+        """Per-rollout telemetry: wall duration (the §4.1 slow/stuck-
+        rollout signal), token count, and weight-push staleness — how many
+        pushes landed since the version this rollout LAST sampled under
+        (0 = perfectly fresh; the buffer's τ filter drops > tau)."""
+        self.registry.observe("rollout.duration_ms",
+                              (time.perf_counter() - t_start) * 1e3)
+        self.registry.inc("rollout.rollouts")
+        self.registry.inc("rollout.tokens", n_tokens)
+        self.registry.observe("rollout.staleness", self.version - version,
+                              boundaries=[0, 1, 2, 4, 8, 16, 32])
 
     # ------------------------------------------------------- engine-backed
     def serving_frontend(self, *, max_batch: int = 8, block_size: int = 16,
@@ -154,7 +177,8 @@ class RolloutEngine:
                 # streams, exactly like the generate() path
                 eng = ContinuousEngine(
                     self.cfg, params, capture_logprobs=True,
-                    seed=self._seed, weight_version=version, **kw)
+                    seed=self._seed, weight_version=version,
+                    registry=self.registry, **kw)
                 self._frontend = AsyncFrontend(eng)
                 self._serving_kw = kw
             elif kw != self._serving_kw:
@@ -182,12 +206,14 @@ class RolloutEngine:
         mid-batch splits the batch across snapshots cleanly instead of
         blocking behind it)."""
         fe = self.serving_frontend(**engine_kw)
+        t_start = time.perf_counter()
         handles = [fe.submit(p, max_new=max_new, temperature=temperature)
                    for p in prompts]
         outs = []
         for rid, h in zip(rollout_ids, handles):
             r = fe.result(h)
             self.gateway.record(rid, r.out, r.out_logprobs, r.out_version)
+            self._observe_rollout(t_start, len(r.out), r.out_version)
             outs.append(r.out)
         return outs
 
@@ -202,10 +228,12 @@ class RolloutEngine:
         a slow group elsewhere never serializes this one (the
         decoupled-generation posture ``Orchestrator`` workers use)."""
         fe = self.serving_frontend(**engine_kw)
+        t_start = time.perf_counter()
         h = fe.submit(prompt, max_new=max_new, temperature=temperature)
         r = fe.result(h)
         self.gateway.record(rollout_id, r.out, r.out_logprobs,
                             r.out_version)
+        self._observe_rollout(t_start, len(r.out), r.out_version)
         return r.out
 
 

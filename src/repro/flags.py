@@ -58,6 +58,36 @@ def frontend_wait_s() -> float:
     return float(os.environ.get("REPRO_FRONTEND_WAIT_S", "0.05"))
 
 
+def trace_enabled() -> bool:
+    """Process-wide default for serving trace capture (``REPRO_TRACE``).
+
+    ``1``/``true``/``yes`` turns every newly-constructed engine's
+    ``Tracer`` on (per-request lifecycle + engine-step spans, exportable
+    as Chrome trace-event JSON — see ``repro.obs.trace``).  Off (the
+    default) the tracer hooks are single attribute checks: no buffer
+    growth, no timestamps, byte-identical serving behavior.  An explicit
+    ``ContinuousEngine(tracer=...)`` always wins.
+    """
+    return os.environ.get("REPRO_TRACE", "0").lower() in ("1", "true", "yes")
+
+
+def trace_buffer_limit() -> int:
+    """Max buffered trace events per ``Tracer`` (``REPRO_TRACE_BUFFER``,
+    default 200000).  Beyond it new events are counted as dropped instead
+    of appended — a trace left on for a long-running serve loop degrades
+    to a bounded prefix, never an OOM."""
+    return int(os.environ.get("REPRO_TRACE_BUFFER", "200000"))
+
+
+def admit_steps_window() -> int:
+    """Bound on the ``stats["admit_steps"]`` history deque
+    (``REPRO_ADMIT_STEPS_WINDOW``, default 4096 admissions).  The old
+    unbounded list grew one entry per admission forever — a memory leak
+    on a long-running serve loop; the deque keeps the most recent window
+    (tests only ever inspect recent admissions)."""
+    return int(os.environ.get("REPRO_ADMIT_STEPS_WINDOW", "4096"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

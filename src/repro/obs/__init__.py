@@ -1,0 +1,4 @@
+from repro.obs.metrics import (DEFAULT_TIME_BUCKETS_MS,  # noqa: F401
+                               Histogram, MetricsRegistry, StatsView)
+from repro.obs.trace import (Tracer, validate_chrome_trace,  # noqa: F401
+                             validate_trace_file)

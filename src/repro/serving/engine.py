@@ -35,6 +35,32 @@ class Request:
     # ContinuousEngine; the drain-barrier push protocol guarantees one
     # request never spans two versions — the TITO version stamp)
     out_version: Optional[int] = None
+    # telemetry (repro.obs): request id unique per engine, and monotonic
+    # wall-clock stamps (time.perf_counter seconds) at submission, first
+    # generated token, and completion.  AsyncFrontend stamps t_submit on
+    # the CALLER's thread so queueing ahead of the serve thread counts
+    # toward TTFT; the engine stamps the rest and derives the TTFT/TPOT/
+    # latency histograms from them on finish.
+    rid: Optional[int] = None
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time-to-first-token (seconds); None until the first token."""
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time-per-output-token AFTER the first (seconds); None
+        until finished, 0.0 for single-token requests."""
+        if self.t_first is None or self.t_finish is None or self.out is None:
+            return None
+        n = len(self.out)
+        return (self.t_finish - self.t_first) / (n - 1) if n > 1 else 0.0
 
 
 def sample_token(logits_row: np.ndarray, temperature: float, rng) -> int:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -114,6 +115,10 @@ class AsyncFrontend:
         state consistent — the hook sessions use to pin blocks."""
         req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       temperature=temperature)
+        # TTFT clock starts HERE, on the caller's thread: time spent in
+        # the inbox waiting for the serve thread is real latency the
+        # client observes, so it must count toward the SLO
+        req.t_submit = time.perf_counter()
         self.engine.validate(req)
         with self._work:
             if self._stop or self.crashed is not None:
@@ -201,6 +206,28 @@ class AsyncFrontend:
     @property
     def stats(self) -> dict:
         return dict(self.engine.stats)
+
+    @property
+    def registry(self):
+        """The engine's ``MetricsRegistry`` (TTFT/TPOT histograms etc.).
+
+        Reads (snapshot/summary) are thread-safe; mutation belongs to the
+        serving layers."""
+        return self.engine.registry
+
+    @property
+    def tracer(self):
+        return self.engine.tracer
+
+    def latency_summary(self) -> dict:
+        """Live TTFT/TPOT/latency/queue histogram summaries — measured
+        from the CALLER's submit() call, across the serve thread."""
+        return self.engine.latency_summary()
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """Export buffered trace events as Chrome trace-event JSON
+        (viewable in Perfetto); empty if the tracer is disabled."""
+        return self.engine.tracer.export(path)
 
     # -------------------------------------------------------- serve thread
     def _serve_loop(self) -> None:
@@ -365,6 +392,7 @@ class AsyncSession:
         self.last_turn = {"prompt_tokens": len(self._turn_prompt),
                           "new_tokens": int(len(req.out)),
                           "version": int(req.out_version)}
+        self.last_turn["ttft_ms"] = (req.ttft_s or 0.0) * 1e3
         self._turn_handle = self._turn_prompt = None
         return req
 

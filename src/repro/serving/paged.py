@@ -51,6 +51,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional
 
 from repro.core.paging import blocks_for  # noqa: F401  (re-export)
+from repro.obs.metrics import MetricsRegistry, StatsView
 
 
 class CacheFull(RuntimeError):
@@ -60,11 +61,21 @@ class CacheFull(RuntimeError):
 class PagedKVCache:
     """Refcounted free-list allocator over ``num_blocks`` blocks."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 registry: Optional[MetricsRegistry] = None):
         if num_blocks <= 0 or block_size <= 0:
             raise ValueError("num_blocks and block_size must be positive")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # telemetry: allocation counters as a registry-backed view, plus
+        # free/used gauges kept current for snapshot()/dashboards (the
+        # engine shares its registry here, so pool pressure shows up next
+        # to the TTFT histograms it causes)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.stats = StatsView(self.registry, "kv",
+                               ["blocks_allocated", "blocks_recycled"])
+        self.registry.set_gauge("kv.free_blocks", num_blocks)
+        self.registry.set_gauge("kv.used_blocks", 0)
         # LIFO free list, seeded so pop() hands out low ids first (makes
         # allocation order deterministic and easy to read in tests).
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
@@ -77,6 +88,10 @@ class PagedKVCache:
         # protocol); bumped by set_version on an applied weight push
         self.version = 0
         self._bver: Dict[int, int] = {}
+
+    def _sync_gauges(self) -> None:
+        self.registry.set_gauge("kv.free_blocks", len(self._free))
+        self.registry.set_gauge("kv.used_blocks", len(self._ref))
 
     @property
     def free_blocks(self) -> int:
@@ -130,6 +145,8 @@ class PagedKVCache:
         for b in blocks:
             self._ref[b] = 1
             self._bver[b] = self.version
+        self.stats["blocks_allocated"] += n
+        self._sync_gauges()
         return blocks
 
     def retain(self, blocks: List[int]) -> None:
@@ -152,12 +169,17 @@ class PagedKVCache:
         bad = [b for b in blocks if b not in self._ref]
         if bad:
             raise ValueError(f"release: blocks {bad} are not allocated")
+        recycled = 0
         for b in blocks:
             self._ref[b] -= 1
             if self._ref[b] == 0:
                 del self._ref[b]
                 del self._bver[b]
                 self._free.append(b)
+                recycled += 1
+        if recycled:
+            self.stats["blocks_recycled"] += recycled
+            self._sync_gauges()
 
     def free(self, blocks: List[int]) -> None:
         """Strict release: every block must be exclusively held (ref 1).
@@ -177,3 +199,5 @@ class PagedKVCache:
             del self._ref[b]
             del self._bver[b]
             self._free.append(b)
+        self.stats["blocks_recycled"] += len(blocks)
+        self._sync_gauges()

@@ -90,10 +90,15 @@ class PrefixCache:
         self.block_size = kv.block_size
         self.root = _Node((), None, None)
         self._tick = 0
-        self.stats = {"hits": 0, "misses": 0, "matched_tokens": 0,
-                      "evictions": 0, "inserted_blocks": 0,
-                      "deduped_blocks": 0, "version_refused": 0,
-                      "refreshed_blocks": 0, "stale_evictions": 0}
+        # registry-backed stats view (same keys/semantics as the old
+        # dict); shares the allocator's registry so cache behavior lands
+        # in the same snapshot as the engine latencies it shapes
+        from repro.obs.metrics import StatsView
+        self.stats = StatsView(
+            kv.registry, "prefix",
+            ["hits", "misses", "matched_tokens", "evictions",
+             "inserted_blocks", "deduped_blocks", "version_refused",
+             "refreshed_blocks", "stale_evictions"])
         kv.evictor = self.evict
 
     # ------------------------------------------------------------- queries

@@ -108,6 +108,7 @@ mask) is gone.
 from __future__ import annotations
 
 import collections
+import time
 from typing import List, Optional
 
 import jax
@@ -116,6 +117,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import get_model
+from repro.obs.metrics import MetricsRegistry, StatsView
+from repro.obs.trace import Tracer
 from repro.serving.engine import Request, sample_token
 from repro.serving.paged import CacheFull, PagedKVCache, blocks_for
 from repro.serving.prefix_cache import PrefixCache
@@ -155,7 +158,9 @@ class ContinuousEngine:
                  spec_steps: Optional[int] = None,
                  weight_version: int = 0,
                  true_logprobs: bool = False,
-                 step_token_budget: Optional[int] = None):
+                 step_token_budget: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
                 f"ContinuousEngine supports transformer + hybrid families, "
@@ -191,6 +196,15 @@ class ContinuousEngine:
         if step_token_budget is not None and step_token_budget < 1:
             raise ValueError("step_token_budget must be >= 1, got "
                              f"{step_token_budget}")
+        # one registry per engine unless the caller shares one (e.g. a
+        # RolloutEngine pooling serving + rollout metrics); the tracer
+        # defaults to the process-wide REPRO_TRACE switch and is a no-op
+        # (single attribute check, no buffer growth) when disabled
+        from repro.flags import admit_steps_window, trace_enabled
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None \
+            else Tracer(enabled=trace_enabled())
+        self._admit_window = admit_steps_window()
         self.spec_steps = spec_steps
         self.cfg = cfg
         self.params = params
@@ -208,7 +222,8 @@ class ContinuousEngine:
         # those writes land in trash instead of clamping into a live block
         self.table_width = self.max_blocks + \
             (-(-spec_steps // block_size) if spec_steps else 0)
-        self.kv = PagedKVCache(num_blocks, block_size)
+        self.kv = PagedKVCache(num_blocks, block_size,
+                               registry=self.registry)
         self.kv.set_version(weight_version)
         self.prefill_chunk = prefill_chunk
         self.capture_logprobs = capture_logprobs
@@ -232,20 +247,27 @@ class ContinuousEngine:
         self.slots: List[Optional[_Active]] = [None] * max_batch
         self.waiting: collections.deque = collections.deque()
         self._rng = np.random.default_rng(seed)
-        self.stats = {"steps": 0, "prefills": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "admit_steps": [],
-                      "prefill_tokens": 0, "cached_tokens": 0,
-                      "cow_forks": 0, "chunk_steps": 0,
-                      "gather_bytes_saved": 0,
-                      "prefill_gather_bytes_saved": 0,
-                      # speculative decode (spec_steps > 0): drafted vs
-                      # accepted counts; spec_rounds counts (slot, step)
-                      # verifications that drafted at least one token
-                      "draft_tokens": 0, "accepted_tokens": 0,
-                      "spec_rounds": 0,
-                      # weight pushes applied at the drain barrier, and
-                      # admissions deferred by the step-token budget
-                      "weight_pushes": 0, "budget_deferrals": 0}
+        # the historical stats dict, now a VIEW over registry counters
+        # (same keys, same reads/writes; "admit_steps" is a BOUNDED deque
+        # — the unbounded list leaked memory on a long-running serve
+        # loop); "compiles" counts actual jit traces of the engine's
+        # compiled steps — the re-jitting hazard as a first-class metric
+        self._stats = StatsView(
+            self.registry, "engine",
+            ["steps", "prefills", "decode_steps", "decode_tokens",
+             "prefill_tokens", "cached_tokens", "cow_forks", "chunk_steps",
+             "gather_bytes_saved", "prefill_gather_bytes_saved",
+             # speculative decode (spec_steps > 0): drafted vs accepted
+             # counts; spec_rounds counts (slot, step) verifications that
+             # drafted at least one token
+             "draft_tokens", "accepted_tokens", "spec_rounds",
+             # weight pushes applied at the drain barrier, and admissions
+             # deferred by the step-token budget
+             "weight_pushes", "budget_deferrals", "compiles"],
+            local={"admit_steps":
+                   collections.deque(maxlen=self._admit_window)})
+        self._next_rid = 0
+        self._push_t0: Optional[float] = None
         # 'pallas' reads KV blocks in place (decode kernels at S==1, the
         # flash-prefill kernels on spans); 'ref' restores the full-view
         # gather for both phases (byte-identical greedy — the parity
@@ -289,8 +311,38 @@ class ContinuousEngine:
             self._spec_round = jax.jit(self._spec_round_fn,
                                        donate_argnums=(4,))
 
+    # ------------------------------------------------------------ telemetry
+    @property
+    def stats(self):
+        """The historical stats dict, as a registry-backed ``StatsView``."""
+        return self._stats
+
+    @stats.setter
+    def stats(self, values) -> None:
+        # benchmark idiom: ``eng.stats = {k: 0, ...}`` resets the counters
+        # (registry-backed, so the snapshot resets with the view)
+        self._stats.reset(values)
+
+    def latency_summary(self) -> dict:
+        """Live per-request latency distributions (ms): TTFT (submit ->
+        first token), TPOT (mean inter-token after the first), total
+        latency, and queue wait — each a fixed-bucket histogram summary
+        with count/mean/min/max/p50/p95/p99.  Measured on the REAL engine
+        (wall-clock stamps on every request), not the pd_sim model."""
+        return {name: self.registry.summary(f"engine.{name}")
+                for name in ("ttft_ms", "tpot_ms", "latency_ms",
+                             "queue_ms")}
+
+    def _compiled(self, fn: str) -> None:
+        """Runs INSIDE an engine jit's Python body — i.e. only when jax is
+        actually tracing (a compile).  Steady-state steps hit the jit
+        cache and never re-enter Python, so this counts recompiles."""
+        self._stats["compiles"] += 1
+        self.tracer.instant("jit.compile", fn=fn)
+
     # ------------------------------------------------------------------ jit
     def _decode_fn(self, params, tok, pool, tables, lengths):
+        self._compiled("decode")
         return self.model.decode_step(params, tok, self.cfg, pool, lengths,
                                       block_tables=tables,
                                       paged_impl=self.attn_impl)
@@ -298,12 +350,14 @@ class ContinuousEngine:
     def _hybrid_decode_fn(self, params, tok, kv, ssm, tables, lengths):
         # kv rides in the DONATED slot (argnums 2); ssm stays undonated so
         # the pre-step recurrent state survives for _ssm_restore
+        self._compiled("decode")
         return self.model.decode_step(params, tok, self.cfg,
                                       {"ssm": ssm, "kv": kv}, lengths,
                                       block_tables=tables,
                                       paged_impl=self.attn_impl)
 
     def _prefill_fn(self, params, toks, pool, table, starts):
+        self._compiled("prefill")
         if self.spec_steps:
             # speculating engines prefill through verify_step — the same
             # span forward, but it also returns the trunk hidden states
@@ -329,6 +383,7 @@ class ContinuousEngine:
         replaces transferred (B,1,V); (B,n+1,V) would scale the hot
         path's device->host traffic with the vocab for an argmax)."""
         from repro.serving.speculative import mtp_draft
+        self._compiled("spec_round")
         drafts = mtp_draft(params, self.cfg, h_last, tok, positions,
                            self.spec_steps).astype(jnp.int32)
         toks = jnp.concatenate([tok, drafts], axis=1)
@@ -341,6 +396,7 @@ class ContinuousEngine:
     def _hybrid_prefill_fn(self, params, toks, pool, table, starts, slot):
         # thread ONE slot's recurrent state through the batch-1 prefill;
         # the shared-attention KV pool is global, the ssm state per-slot
+        self._compiled("prefill")
         ssm_i = jax.tree.map(
             lambda x: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=1),
             pool["ssm"])
@@ -426,6 +482,13 @@ class ContinuousEngine:
 
     def submit(self, req: Request) -> None:
         self.validate(req)
+        req.rid = self._next_rid
+        self._next_rid += 1
+        if req.t_submit is None:      # AsyncFrontend stamps on the caller's
+            req.t_submit = time.perf_counter()   # thread, before the queue
+        self.tracer.instant("req.submit", req=req.rid,
+                            prompt_tokens=len(req.prompt),
+                            max_new=req.max_new)
         self.waiting.append(req)
 
     # -------------------------------------------------------- weight pushes
@@ -447,6 +510,9 @@ class ContinuousEngine:
             raise ValueError(f"weight versions are monotone: push {version}"
                              f" < pending {pend[1]}")
         self._pending_push = (params, version)
+        if self._push_t0 is None:      # drain clock starts at the FIRST
+            self._push_t0 = time.perf_counter()   # push of a deferred run
+        self.tracer.instant("push.requested", version=version)
         return self._apply_push_if_drained()
 
     def _apply_push_if_drained(self) -> bool:
@@ -457,6 +523,14 @@ class ContinuousEngine:
         self._pending_push = None
         self.params = params
         self.weight_version = version
+        # drain barrier latency: push requested -> applied (how long the
+        # oldest pending snapshot waited on in-flight sequences)
+        drain_ms = (time.perf_counter() - self._push_t0) * 1e3 \
+            if self._push_t0 is not None else 0.0
+        self._push_t0 = None
+        self.registry.observe("engine.push_drain_ms", drain_ms)
+        self.tracer.instant("push.applied", version=version,
+                            drain_ms=drain_ms)
         # existing cached blocks keep their old stamps: match() now walks
         # past none of them, insert() refreshes hot paths, evict() takes
         # stale blocks first — the incremental invalidation
@@ -475,6 +549,17 @@ class ContinuousEngine:
     def step(self) -> None:
         """One iteration: retire -> apply drained weight push -> admit ->
         chunk prefill -> batched decode."""
+        tr = self.tracer
+        if tr.enabled:
+            # step span args: the timeline quantities an SLO post-mortem
+            # needs — batch occupancy, queue depth, live tokens, pool use
+            tr.begin("engine.step",
+                     occupancy=sum(1 for s in self.slots if s is not None),
+                     waiting=len(self.waiting),
+                     live_tokens=int(self.lengths.sum()),
+                     pool_used=self.kv.used_blocks,
+                     pool_free=self.kv.free_blocks,
+                     phase="spec" if self.spec_steps else "decode")
         self._retire()
         self._apply_push_if_drained()
         self._admit()
@@ -484,6 +569,11 @@ class ContinuousEngine:
         else:
             self._decode_active()
         self.stats["steps"] += 1
+        if tr.enabled:
+            tr.end("engine.step")
+        self.registry.set_gauge(
+            "engine.pool_utilization",
+            self.kv.used_blocks / self.kv.num_blocks)
 
     def reset_cache(self) -> None:
         """Drop all cached prefix blocks (benchmark hygiene; weight pushes
@@ -530,6 +620,24 @@ class ContinuousEngine:
         if self.capture_logprobs:
             s.req.out_logprobs = np.asarray(s.lps[:s.req.max_new],
                                             np.float32)
+        # live latency SLO metrics (GLM-5 §3.6 / SNIPPETS Snippet 3):
+        # per-request TTFT (submit -> first token, queueing included) and
+        # TPOT (mean inter-token time after the first) feed fixed-bucket
+        # histograms — p50/p95/p99 with no samples stored
+        s.req.t_finish = time.perf_counter()
+        reg = self.registry
+        if s.req.t_submit is not None:
+            reg.observe("engine.latency_ms",
+                        (s.req.t_finish - s.req.t_submit) * 1e3)
+            ttft = s.req.ttft_s
+            if ttft is not None:
+                reg.observe("engine.ttft_ms", ttft * 1e3)
+        tpot = s.req.tpot_s
+        if tpot is not None and len(s.req.out) > 1:
+            reg.observe("engine.tpot_ms", tpot * 1e3)
+        self.tracer.instant("req.finished", req=s.req.rid,
+                            version=s.version,
+                            new_tokens=int(len(s.req.out)))
         if self.prefix is not None:
             # KV exists for every position actually written: the prompt
             # plus all DECODED output tokens (the final sampled token was
@@ -637,6 +745,13 @@ class ContinuousEngine:
         self.stats["cached_tokens"] += m
         self.stats["prefill_tokens"] += plen - m
         self.stats["admit_steps"].append(self.stats["steps"])
+        if req.t_submit is not None:
+            self.registry.observe(
+                "engine.queue_ms",
+                (time.perf_counter() - req.t_submit) * 1e3)
+        self.tracer.instant("req.admitted", req=req.rid, slot=slot,
+                            cached_tokens=m, blocks=len(blocks),
+                            version=self.weight_version)
         if self.prefill_chunk is None:
             self._prefill_span(slot, s, span=plen - m)  # whole suffix
         return True
@@ -679,6 +794,8 @@ class ContinuousEngine:
             live = ((start + real - 1) // bs + 1) * bs
             self.stats["prefill_gather_bytes_saved"] += \
                 (self.table_width * bs - live) * self._token_bytes
+        self.tracer.instant("req.prefill", req=s.req.rid, start=start,
+                            span=real)
         s.pos = start + real
         if s.pos >= plen:                       # final span: sample token 1
             lg = np.asarray(logits[0, real - 1], np.float32)
@@ -687,6 +804,11 @@ class ContinuousEngine:
                 s.h_last = np.asarray(hid[0, real - 1], np.float32)
             self.tables[slot] = s.row
             self.lengths[slot] = plen
+            # the first generated token is KNOWN here (``pending``; it is
+            # emitted unchanged) — this is the TTFT stamp
+            if s.req.t_first is None:
+                s.req.t_first = time.perf_counter()
+            self.tracer.instant("req.first_token", req=s.req.rid)
 
     def _prefill_chunks(self) -> None:
         if self.prefill_chunk is None:
@@ -843,6 +965,8 @@ class ContinuousEngine:
             self.stats["draft_tokens"] += n_i
             self.stats["accepted_tokens"] += acc
             self.stats["decode_tokens"] += acc
+            self.tracer.instant("req.spec_round", req=s.req.rid,
+                                drafted=n_i, accepted=acc)
         self.stats["decode_steps"] += 1
 
     def _rollback(self, i: int, s: _Active, new_len: int) -> None:

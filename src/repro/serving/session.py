@@ -75,6 +75,11 @@ class AgentSession:
             - before["draft_tokens"],
             "accepted_tokens": self.engine.stats["accepted_tokens"]
             - before["accepted_tokens"],
+            # live turn latency (ms): TTFT covers the suffix prefill this
+            # turn actually paid, so cache hits show up as TTFT drops
+            "ttft_ms": (req.ttft_s or 0.0) * 1e3,
+            "latency_ms": ((req.t_finish - req.t_submit) * 1e3
+                           if req.t_submit and req.t_finish else 0.0),
         }
         return req.out
 

@@ -1,0 +1,342 @@
+"""Telemetry subsystem tests (obs tentpole).
+
+Covers the PR acceptance criteria:
+  * fixed-bucket histogram percentiles track numpy within bucket width;
+  * registry counters/gauges/snapshot/delta semantics, StatsView facade
+    (reads, +=, dict(), assignment-reset through the engine property);
+  * exported Chrome traces are well-formed (required keys, monotone ts,
+    matched B/E stacks, complete request lifecycles) and the validator
+    actually rejects broken traces;
+  * greedy outputs byte-identical with tracing enabled vs disabled on
+    all four engine families;
+  * disabled tracer is a no-op: zero buffer growth;
+  * live TTFT <= end-to-end latency for every request under concurrent
+    front-end submits, and the registry histograms agree with the
+    per-request stamps;
+  * ``admit_steps`` is a bounded deque (the unbounded-list leak fix);
+  * jit recompiles surface as the ``compiles`` counter.
+"""
+import collections
+import functools
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import DSAConfig
+from repro.models import get_model
+from repro.obs.metrics import (DEFAULT_TIME_BUCKETS_MS, Histogram,
+                               MetricsRegistry, StatsView)
+from repro.obs.trace import (Tracer, validate_chrome_trace,
+                             validate_trace_file)
+from repro.serving import AsyncFrontend, ContinuousEngine, Request
+
+_KW = dict(max_batch=2, block_size=8, num_blocks=32, max_len=64)
+
+
+def _family_cfg(name):
+    if name in ("gqa", "dsa"):
+        return get_smoke_config("yi_6b").replace(
+            d_model=128, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+            vocab_size=256,
+            dsa=DSAConfig(index_heads=2, index_head_dim=16, top_k=32,
+                          block_size=16) if name == "dsa" else None)
+    if name == "mla":
+        return get_smoke_config("glm5_744b").replace(
+            d_model=128, num_heads=2, num_kv_heads=2, d_ff=256,
+            vocab_size=256, num_experts=0, num_shared_experts=0,
+            first_k_dense=1, mtp=None)
+    return get_smoke_config("zamba2_2p7b").replace(      # hybrid
+        d_model=128, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, ssm_state=8, dsa=None)
+
+
+@functools.lru_cache(maxsize=None)
+def _family_params(name):
+    cfg = _family_cfg(name)
+    return cfg, get_model(cfg).init(jax.random.key(0), cfg)[0]
+
+
+def _workload(cfg):
+    rng = np.random.default_rng(3)
+    return [Request(prompt=rng.integers(3, cfg.vocab_size, size=k)
+                    .astype(np.int32), max_new=m)
+            for k, m in zip((11, 5, 17, 7), (6, 9, 3, 7))]
+
+
+# ---------------------------------------------------------------------------
+# histogram: percentiles vs numpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+def test_histogram_percentiles_track_numpy(dist):
+    rng = np.random.default_rng(17)
+    if dist == "uniform":
+        xs = rng.uniform(0.1, 900.0, size=5000)
+    elif dist == "lognormal":
+        xs = np.exp(rng.normal(1.0, 1.5, size=5000))     # fat tail, ~0.05-500
+    else:
+        xs = np.concatenate([rng.uniform(0.5, 2.0, size=2500),
+                             rng.uniform(100.0, 400.0, size=2500)])
+    h = Histogram(DEFAULT_TIME_BUCKETS_MS)
+    for x in xs:
+        h.observe(float(x))
+    bounds = [0.0] + list(h.boundaries)
+    for q in (50, 90, 95, 99):
+        est = h.percentile(q)
+        exact = float(np.percentile(xs, q))
+        # error is bounded by the width of the bucket owning the exact
+        # percentile (both edges clamped by observed min/max)
+        i = int(np.searchsorted(h.boundaries, exact))
+        lo = bounds[i] if i < len(bounds) else h.boundaries[-1]
+        hi = h.boundaries[i] if i < len(h.boundaries) else float(np.max(xs))
+        width = min(hi, float(np.max(xs))) - max(lo, float(np.min(xs)))
+        assert abs(est - exact) <= max(width, 1e-9) + 1e-9, \
+            f"p{q}: est={est} exact={exact} bucket width={width}"
+    s = h.summary()
+    assert s["count"] == len(xs)
+    np.testing.assert_allclose(s["mean"], xs.mean(), rtol=1e-6)
+    assert s["min"] == pytest.approx(float(xs.min()))
+    assert s["max"] == pytest.approx(float(xs.max()))
+
+
+def test_histogram_edge_cases():
+    h = Histogram([1.0, 10.0])
+    assert h.summary()["p99"] == 0.0                  # empty: all zeros
+    h.observe(5.0)
+    # single sample: every percentile is that sample (min==max clamp)
+    assert h.percentile(0) == 5.0
+    assert h.percentile(50) == 5.0
+    assert h.percentile(100) == 5.0
+    h.observe(5000.0)                                 # overflow bucket
+    assert h.percentile(100) == 5000.0                # clamped to vmax
+    with pytest.raises(ValueError):
+        h.percentile(101)
+    with pytest.raises(ValueError):
+        Histogram([])
+
+
+# ---------------------------------------------------------------------------
+# registry + StatsView semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_snapshot_delta():
+    reg = MetricsRegistry()
+    reg.inc("a.x")
+    reg.inc("a.x", 4)
+    reg.set_gauge("a.g", 0.5)
+    reg.observe("a.h", 3.0, boundaries=[1.0, 10.0])
+    snap = reg.snapshot()
+    assert snap["counters"]["a.x"] == 5
+    assert snap["gauges"]["a.g"] == 0.5
+    assert snap["histograms"]["a.h"]["count"] == 1
+    json.dumps(snap)                                  # JSON-serializable
+    reg.inc("a.x", 2)
+    assert reg.delta(snap)["counters"]["a.x"] == 2
+    reg.reset_histograms("a")
+    assert reg.summary("a.h")["count"] == 0
+
+
+def test_stats_view_facade():
+    reg = MetricsRegistry()
+    sv = StatsView(reg, "eng", ["steps", "tok"],
+                   local={"hist": collections.deque(maxlen=4)})
+    assert dict(sv) == {"steps": 0, "tok": 0, "hist": collections.deque(
+        maxlen=4)}
+    sv["steps"] += 3
+    sv["tok"] = 7
+    sv["hist"].extend(range(10))
+    assert sv["steps"] == 3 and reg.counter("eng.steps") == 3
+    assert list(sv["hist"]) == [6, 7, 8, 9]           # bounded
+    assert "steps" in sv and "nope" not in sv
+    with pytest.raises(KeyError):
+        sv["nope"]
+    sv.reset({"tok": 2})
+    assert sv["steps"] == 0 and sv["tok"] == 2
+    assert len(sv["hist"]) == 0                       # reset clears deques
+
+
+# ---------------------------------------------------------------------------
+# tracer + validator
+# ---------------------------------------------------------------------------
+
+def test_tracer_disabled_is_noop():
+    tr = Tracer(enabled=False)
+    for _ in range(100):
+        tr.instant("x", a=1)
+        tr.begin("s")
+        tr.end("s")
+    assert tr.n_events == 0 and tr.dropped == 0
+    obj = tr.export()
+    assert obj["traceEvents"] == []
+    assert validate_chrome_trace(obj) == []
+
+
+def test_tracer_bounded_buffer_counts_drops():
+    tr = Tracer(enabled=True, limit=5)
+    for i in range(9):
+        tr.instant("e", i=i)
+    assert tr.n_events == 5 and tr.dropped == 4
+    assert tr.export()["otherData"]["dropped_events"] == 4
+
+
+def test_validator_rejects_malformed_traces():
+    ok = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1.0, "pid": 0, "tid": 0},
+        {"name": "a", "ph": "E", "ts": 2.0, "pid": 0, "tid": 0}]}
+    assert validate_chrome_trace(ok) == []
+    assert validate_chrome_trace({"nope": 1})          # not a trace
+    # missing key
+    assert validate_chrome_trace({"traceEvents": [{"name": "a", "ph": "i"}]})
+    # ts regression
+    bad_ts = {"traceEvents": [
+        {"name": "a", "ph": "i", "ts": 5.0, "pid": 0, "tid": 0},
+        {"name": "b", "ph": "i", "ts": 1.0, "pid": 0, "tid": 0}]}
+    assert any("ts" in p for p in validate_chrome_trace(bad_ts))
+    # unbalanced span
+    unb = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1.0, "pid": 0, "tid": 0}]}
+    assert any("unclosed" in p for p in validate_chrome_trace(unb))
+    # mismatched nesting
+    cross = {"traceEvents": [
+        {"name": "a", "ph": "B", "ts": 1.0, "pid": 0, "tid": 0},
+        {"name": "b", "ph": "E", "ts": 2.0, "pid": 0, "tid": 0}]}
+    assert any("closes" in p for p in validate_chrome_trace(cross))
+    # finished without lifecycle prelude
+    orphan = {"traceEvents": [
+        {"name": "req.finished", "ph": "i", "ts": 1.0, "pid": 0, "tid": 0,
+         "args": {"req": 3}}]}
+    probs = validate_chrome_trace(orphan)
+    assert sum("request 3" in p for p in probs) == 3   # submit/admit/first
+
+
+def test_validate_trace_file_roundtrip(tmp_path):
+    tr = Tracer(enabled=True)
+    tr.begin("span", k=1)
+    tr.instant("mark")
+    tr.end("span")
+    p = tmp_path / "trace.json"
+    obj = tr.export(str(p))
+    assert validate_chrome_trace(obj) == []
+    assert validate_trace_file(str(p)) == []
+    assert validate_trace_file(str(tmp_path / "missing.json"))
+
+
+# ---------------------------------------------------------------------------
+# engine telemetry: parity, lifecycle, compiles, bounded admit_steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["gqa", "dsa", "mla", "hybrid"])
+def test_engine_greedy_identical_traced_vs_untraced(family):
+    cfg, params = _family_params(family)
+    outs = {}
+    for traced in (False, True):
+        eng = ContinuousEngine(cfg, params,
+                               tracer=Tracer(enabled=traced), **_KW)
+        reqs = _workload(cfg)
+        eng.serve(reqs)
+        outs[traced] = [r.out for r in reqs]
+        if traced:
+            obj = eng.tracer.export()
+            assert validate_chrome_trace(obj) == []
+            names = {e["name"] for e in obj["traceEvents"]}
+            assert {"engine.step", "req.submit", "req.admitted",
+                    "req.first_token", "req.finished",
+                    "jit.compile"} <= names
+        else:
+            assert eng.tracer.n_events == 0            # disabled: no growth
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_request_stamps_and_latency_histograms():
+    cfg, params = _family_params("gqa")
+    eng = ContinuousEngine(cfg, params, **_KW)
+    reqs = _workload(cfg)
+    eng.serve(reqs)
+    for r in reqs:
+        assert r.t_submit is not None and r.t_first is not None \
+            and r.t_finish is not None
+        assert r.t_submit <= r.t_first <= r.t_finish
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.tpot_s is not None and r.tpot_s >= 0
+    lat = eng.latency_summary()
+    assert lat["ttft_ms"]["count"] == len(reqs)
+    assert lat["latency_ms"]["count"] == len(reqs)
+    # every TTFT <= its end-to-end latency, so the histogram maxima agree
+    assert lat["ttft_ms"]["max"] <= lat["latency_ms"]["max"] + 1e-9
+    hist_max = max((r.ttft_s or 0) for r in reqs) * 1e3
+    assert lat["ttft_ms"]["max"] == pytest.approx(hist_max, rel=1e-6)
+
+
+def test_engine_compiles_counter_counts_jit_traces():
+    # prefix cache OFF: a cache hit on the second pass would shorten a
+    # prefill span to a new shape — a REAL recompile the counter should
+    # see, but not the invariance this test is after
+    cfg, params = _family_params("gqa")
+    eng = ContinuousEngine(cfg, params, prefix_cache=False, **_KW)
+    assert eng.stats["compiles"] == 0
+    reqs = _workload(cfg)
+    eng.serve(reqs)
+    first = eng.stats["compiles"]
+    assert first > 0                                   # cold start traced
+    eng.serve(_workload(cfg))
+    assert eng.stats["compiles"] == first              # warm: no re-traces
+
+
+def test_admit_steps_is_bounded(monkeypatch):
+    monkeypatch.setenv("REPRO_ADMIT_STEPS_WINDOW", "8")
+    cfg, params = _family_params("gqa")
+    eng = ContinuousEngine(cfg, params, **_KW)
+    steps = eng.stats["admit_steps"]
+    assert isinstance(steps, collections.deque) and steps.maxlen == 8
+    for _ in range(5):
+        eng.serve(_workload(cfg))
+    assert len(eng.stats["admit_steps"]) <= 8          # leak is gone
+    # the benchmark reset idiom still works through the property setter
+    eng.stats = {k: [] if isinstance(v, list) else 0
+                 for k, v in eng.stats.items()}
+    assert eng.stats["steps"] == 0
+    assert len(eng.stats["admit_steps"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# front-end: TTFT under concurrent submits
+# ---------------------------------------------------------------------------
+
+def test_frontend_concurrent_ttft_monotonicity():
+    cfg, params = _family_params("gqa")
+    fe = AsyncFrontend(ContinuousEngine(
+        cfg, params, tracer=Tracer(enabled=True), max_batch=2, block_size=8,
+        num_blocks=64, max_len=64))
+    rng = np.random.default_rng(5)
+    results = {}
+    lock = threading.Lock()
+
+    def worker(w):
+        prompt = rng.integers(3, cfg.vocab_size, size=9 + w).astype(np.int32)
+        h = fe.submit(prompt, max_new=4 + w % 3)
+        req = fe.result(h)
+        with lock:
+            results[w] = req
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 6
+    for req in results.values():
+        # submit is stamped on the CLIENT thread, so queue wait is part
+        # of TTFT; first token can never precede submission
+        assert req.t_submit <= req.t_first <= req.t_finish
+        assert 0 <= req.ttft_s <= (req.t_finish - req.t_submit) + 1e-9
+    lat = fe.latency_summary()
+    assert lat["ttft_ms"]["count"] == 6
+    assert lat["queue_ms"]["count"] == 6
+    obj = fe.export_trace()
+    assert validate_chrome_trace(obj) == []
+    fe.close()

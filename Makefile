@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test collect bench-serving bench-smoke dev-deps
+.PHONY: test collect bench-serving bench-smoke fault-smoke dev-deps
 
 test:
 	$(PY) -m pytest -q
@@ -22,8 +22,12 @@ bench-serving:
 # its measured accept length (byte-identical greedy asserted inside), and
 # async_frontend BOTH prefill-tokens-saved > 0 across straddled weight
 # pushes (the cache must survive a push) and the >=1.2x tok/s bar for
-# multiplexed vs serialized groups.  Each invocation merges its rows +
-# registry snapshot into BENCH_smoke.json (machine-readable artifact).
+# multiplexed vs serialized groups.  fault_tolerance ENFORCES the
+# robustness bars: zero lost requests under an injected overload+fault
+# trace (alloc storms + step exception + serve-loop crash), survivor
+# outputs byte-identical to the fault-free oracle, typed overload/shed
+# fast-fails, and post-restart traffic.  Each invocation merges its rows
+# + registry snapshot into BENCH_smoke.json (machine-readable artifact).
 BENCH_JSON ?= BENCH_smoke.json
 bench-smoke:
 	rm -f $(BENCH_JSON)
@@ -33,6 +37,22 @@ bench-smoke:
 	$(PY) -m benchmarks.run --only paged_prefill --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only speculative_decode --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only async_frontend --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only fault_tolerance --fast --json $(BENCH_JSON)
+
+# The fault-injection matrix CI's fault-smoke job runs: the fault-
+# tolerance test module under three fixed REPRO_FAULTS specs (distinct
+# seeds; CI additionally repeats one in Pallas interpret mode so the
+# typed-failure paths run over the real kernel dispatch), then the
+# benchmark bars, leaving BENCH_faults.json as the uploadable artifact.
+fault-smoke:
+	REPRO_FAULTS= $(PY) -m pytest -q tests/test_fault_tolerance.py
+	REPRO_FAULTS="alloc@2..4,step@11" REPRO_FAULTS_SEED=1 \
+		$(PY) -m pytest -q tests/test_fault_tolerance.py -k env_spec
+	REPRO_FAULTS="slow~0.2=0.005,crash@9" REPRO_FAULTS_SEED=2 \
+		$(PY) -m pytest -q tests/test_fault_tolerance.py -k env_spec
+	REPRO_FAULTS="prefill~0.15,beat~0.5" REPRO_FAULTS_SEED=3 \
+		$(PY) -m pytest -q tests/test_fault_tolerance.py -k env_spec
+	$(PY) -m benchmarks.run --only fault_tolerance --fast --json BENCH_faults.json
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -35,6 +35,8 @@ SUITES = [
     ("speculative_decode", "S2.1/S3.6: MTP spec decode through the engine"),
     ("async_frontend", "S3.6/S4.1: async front-end vs blocking serve "
                        "under weight pushes"),
+    ("fault_tolerance", "S3.6.3: deadlines/cancel/shed/supervision under "
+                        "an injected fault trace"),
     ("roofline_report", "SRoofline: dry-run derived terms"),
 ]
 

@@ -16,8 +16,13 @@ from repro.obs.metrics import MetricsRegistry
 class HeartbeatMonitor:
     def __init__(self, timeout_s: float = 2.0,
                  on_evict: Optional[Callable[[str], None]] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 faults=None):
         self.timeout_s = timeout_s
+        # deterministic fault injection (repro.faults): the "beat" point
+        # DROPS heartbeats, so an injected storm makes a healthy server
+        # lapse — exercising the real eviction path end to end
+        self.faults = faults
         self._last: Dict[str, float] = {}
         self._healthy: Dict[str, bool] = {}
         self._lock = threading.Lock()
@@ -53,6 +58,9 @@ class HeartbeatMonitor:
             self._sync_gauge_locked()
 
     def beat(self, server_id: str):
+        if self.faults is not None and self.faults.enabled \
+                and self.faults.fires("beat"):
+            return                       # injected: the heartbeat is lost
         with self._lock:
             if self._healthy.get(server_id):
                 self._last[server_id] = time.monotonic()

@@ -43,7 +43,7 @@ class Orchestrator:
     def __init__(self, engines: List[RolloutEngine], *, group_size: int = 4,
                  staleness_tau: int = 4, seed: int = 0,
                  env_failure_rate: float = 0.0, backend: str = "loop",
-                 serving_kw: Optional[dict] = None):
+                 serving_kw: Optional[dict] = None, faults=None):
         if backend not in ("loop", "serving"):
             raise ValueError(f"backend must be 'loop' or 'serving', "
                              f"got {backend!r}")
@@ -66,8 +66,14 @@ class Orchestrator:
         self.buffer = TrajectoryBuffer(group_size, staleness_tau)
         self.group_size = group_size
         self.router = DPRouter(n_ranks=len(engines))
+        # deterministic fault injection (repro.faults): "worker" crashes
+        # a rollout worker mid-loop (the existing self-deregistration
+        # path), "beat" drops heartbeats (threaded into the monitor)
+        from repro.faults import FaultInjector
+        self.faults = FaultInjector.from_env() if faults is None else faults
         self.monitor = HeartbeatMonitor(timeout_s=5.0,
-                                        registry=self.registry)
+                                        registry=self.registry,
+                                        faults=self.faults)
         self.tasks: Dict[str, TaskService] = {}
         self._rng = np.random.default_rng(seed)
         self._stop = threading.Event()
@@ -149,6 +155,11 @@ class Orchestrator:
                 time.sleep(0.005)
                 continue
             try:
+                if self.faults.enabled:
+                    # injected worker crash: same exit as a real one —
+                    # the error is recorded and the worker deregisters
+                    # itself from the heartbeat table on the way out
+                    self.faults.check("worker", rid=wid)
                 self._rollout_group(rng, beat=lambda: self.monitor.beat(sid))
             except Exception as e:   # noqa: BLE001
                 import traceback

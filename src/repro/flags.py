@@ -88,6 +88,54 @@ def admit_steps_window() -> int:
     return int(os.environ.get("REPRO_ADMIT_STEPS_WINDOW", "4096"))
 
 
+def fault_spec() -> str:
+    """Deterministic fault-injection spec (``REPRO_FAULTS``, default "").
+
+    Comma-separated ``point@i`` / ``point@i..j`` / ``point~p`` clauses
+    (optionally ``=x`` parameterized) naming the serving stack's
+    injection points — see ``repro.faults`` for the grammar and the
+    wired points (alloc storms, step exceptions, slow steps, serve-loop
+    crashes, rollout-worker crashes).  Empty disables injection: every
+    site then costs one attribute check."""
+    return os.environ.get("REPRO_FAULTS", "")
+
+
+def fault_seed() -> int:
+    """Seed for probabilistic (``~p``) fault clauses
+    (``REPRO_FAULTS_SEED``, default 0).  A (spec, seed) pair replays the
+    identical fault sequence — the reproducibility contract the
+    fault-injection CI matrix relies on."""
+    return int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+
+
+def max_waiting_default() -> int:
+    """Default bound on ``ContinuousEngine``'s waiting queue
+    (``REPRO_MAX_WAITING``, default 1024).  Beyond it ``submit`` raises
+    the typed ``EngineOverloaded`` instead of growing an unbounded
+    backlog — admission backpressure the caller can see and act on.
+    An explicit ``max_waiting=`` always wins; ``<= 0`` means unbounded."""
+    return int(os.environ.get("REPRO_MAX_WAITING", "1024"))
+
+
+def admit_window() -> int:
+    """Head-of-line scan window for admission (``REPRO_ADMIT_WINDOW``,
+    default 4).  When the queue head cannot admit (not enough free
+    blocks), the scheduler scans up to this many queued requests behind
+    it for a smaller one that fits instead of stalling ALL admission on
+    the head (``stats["admit_skips"]`` counts out-of-order admissions).
+    0 restores strict FCFS."""
+    return int(os.environ.get("REPRO_ADMIT_WINDOW", "4"))
+
+
+def max_restarts_default() -> int:
+    """Bound on ``AsyncFrontend`` supervisor engine restarts
+    (``REPRO_MAX_RESTARTS``, default 3).  Each serve-loop crash rebuilds
+    the engine and re-queues un-started work; past the bound the
+    front-end marks itself crashed and refuses new submissions (a crash
+    loop must not masquerade as a healthy server)."""
+    return int(os.environ.get("REPRO_MAX_RESTARTS", "3"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

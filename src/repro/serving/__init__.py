@@ -1,5 +1,9 @@
 from repro.serving.engine import (Request, ServingEngine,  # noqa: F401
                                   sample_token)
+from repro.serving.errors import (DeadlineExceeded,  # noqa: F401
+                                  EngineOverloaded, EngineRestarted,
+                                  RequestCancelled, RequestShed,
+                                  ServingError)
 from repro.serving.frontend import (AsyncFrontend, AsyncSession,  # noqa: F401
                                     FrontendClosed, PollResult)
 from repro.serving.paged import (CacheFull, PagedKVCache,  # noqa: F401

@@ -22,11 +22,20 @@ from repro.configs.base import ModelConfig
 from repro.models import get_model
 
 
-@dataclasses.dataclass
+# eq=False: requests are identities, not values.  The generated __eq__
+# would compare numpy prompts elementwise (ambiguous-truth ValueError the
+# moment a deque.remove or ``in`` scans the waiting queue); identity
+# equality is also the semantics every queue/slot lookup actually wants.
+@dataclasses.dataclass(eq=False)
 class Request:
     prompt: np.ndarray
     max_new: int = 32
     temperature: float = 0.0
+    # optional completion deadline, seconds RELATIVE to t_submit: the
+    # scheduler retires the request (queued or mid-flight) with a typed
+    # ``DeadlineExceeded`` once the budget elapses, donating any written
+    # KV blocks through the radix path.  None = no deadline.
+    deadline_s: Optional[float] = None
     out: Optional[np.ndarray] = None
     # per-token behavior logprobs of ``out`` (filled by ContinuousEngine
     # when capture_logprobs=True — the TITO contract for RL rollouts)
@@ -45,6 +54,20 @@ class Request:
     t_submit: Optional[float] = None
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
+    # fault-tolerance terminal state: exactly one of ``out`` / ``error``
+    # is set when the request leaves the engine.  ``error`` is one of the
+    # typed ``repro.serving.errors`` classes (or the isolated fault that
+    # killed just this request); ``status`` names the outcome —
+    # ok | failed | cancelled | deadline | shed | restarted.
+    error: Optional[Exception] = None
+    status: str = "ok"
+
+    @property
+    def finished(self) -> bool:
+        """Has the request reached a terminal state (success OR typed
+        failure)?  The fault-tolerance contract: every submitted request
+        eventually flips this, never hangs."""
+        return self.out is not None or self.error is not None
 
     @property
     def ttft_s(self) -> Optional[float]:

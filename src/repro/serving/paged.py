@@ -62,11 +62,16 @@ class PagedKVCache:
     """Refcounted free-list allocator over ``num_blocks`` blocks."""
 
     def __init__(self, num_blocks: int, block_size: int,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 faults=None):
         if num_blocks <= 0 or block_size <= 0:
             raise ValueError("num_blocks and block_size must be positive")
         self.num_blocks = num_blocks
         self.block_size = block_size
+        # deterministic fault injection (repro.faults): the "alloc" point
+        # raises CacheFull here so an injected alloc-fail storm exercises
+        # the REAL pressure paths (retry-cold, stall, shedding) end to end
+        self.faults = faults
         # telemetry: allocation counters as a registry-backed view, plus
         # free/used gauges kept current for snapshot()/dashboards (the
         # engine shares its registry here, so pool pressure shows up next
@@ -136,6 +141,9 @@ class PagedKVCache:
         raises CacheFull if still short."""
         if n <= 0:
             raise ValueError(f"alloc({n}): need a positive block count")
+        if self.faults is not None and self.faults.fires("alloc"):
+            raise CacheFull(f"injected alloc failure "
+                            f"(alloc@{self.faults.calls['alloc'] - 1})")
         if n > len(self._free) and self.evictor is not None:
             self.evictor(n - len(self._free))
         if n > len(self._free):

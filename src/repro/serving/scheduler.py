@@ -116,10 +116,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.faults import FaultInjector
 from repro.models import get_model
 from repro.obs.metrics import MetricsRegistry, StatsView
 from repro.obs.trace import Tracer
 from repro.serving.engine import Request, sample_token
+from repro.serving.errors import (DeadlineExceeded, EngineOverloaded,
+                                  RequestCancelled, RequestShed)
 from repro.serving.paged import CacheFull, PagedKVCache, blocks_for
 from repro.serving.prefix_cache import PrefixCache
 
@@ -160,7 +163,10 @@ class ContinuousEngine:
                  true_logprobs: bool = False,
                  step_token_budget: Optional[int] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 max_waiting: Optional[int] = None,
+                 admit_hol_window: Optional[int] = None,
+                 faults: Optional[FaultInjector] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
                 f"ContinuousEngine supports transformer + hybrid families, "
@@ -200,11 +206,25 @@ class ContinuousEngine:
         # RolloutEngine pooling serving + rollout metrics); the tracer
         # defaults to the process-wide REPRO_TRACE switch and is a no-op
         # (single attribute check, no buffer growth) when disabled
-        from repro.flags import admit_steps_window, trace_enabled
+        from repro.flags import (admit_steps_window, admit_window,
+                                 max_waiting_default, trace_enabled)
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None \
             else Tracer(enabled=trace_enabled())
         self._admit_window = admit_steps_window()
+        # admission backpressure: bound on the waiting queue (submit
+        # fast-fails with EngineOverloaded beyond it; <= 0 = unbounded)
+        # and the head-of-line scan window (how many queued requests
+        # behind a stalled head are probed for a smaller fit)
+        if max_waiting is None:
+            max_waiting = max_waiting_default()
+        self.max_waiting = max_waiting if max_waiting > 0 else None
+        self.admit_hol_window = admit_window() \
+            if admit_hol_window is None else admit_hol_window
+        # deterministic fault injection (repro.faults): shared with the
+        # allocator so an injected alloc storm surfaces through the REAL
+        # CacheFull pressure paths.  Disabled specs cost one attr check.
+        self.faults = FaultInjector.from_env() if faults is None else faults
         self.spec_steps = spec_steps
         self.cfg = cfg
         self.params = params
@@ -223,8 +243,21 @@ class ContinuousEngine:
         self.table_width = self.max_blocks + \
             (-(-spec_steps // block_size) if spec_steps else 0)
         self.kv = PagedKVCache(num_blocks, block_size,
-                               registry=self.registry)
+                               registry=self.registry, faults=self.faults)
         self.kv.set_version(weight_version)
+        # everything a supervisor needs to rebuild this engine after a
+        # crash (``respawn``) — geometry and policy, all RESOLVED values
+        # so a respawn is deterministic even if env flags change later.
+        # Params/weight_version are taken from live state at respawn time.
+        self._init_kw = dict(
+            max_batch=max_batch, block_size=block_size,
+            num_blocks=num_blocks, max_len=max_len, seed=seed,
+            prefix_cache=prefix_cache, prefill_chunk=prefill_chunk,
+            capture_logprobs=capture_logprobs, attn_impl=attn_impl,
+            spec_steps=spec_steps, true_logprobs=true_logprobs,
+            step_token_budget=step_token_budget,
+            max_waiting=0 if self.max_waiting is None else self.max_waiting,
+            admit_hol_window=self.admit_hol_window)
         self.prefill_chunk = prefill_chunk
         self.capture_logprobs = capture_logprobs
         self.hybrid = cfg.family == "hybrid"
@@ -263,7 +296,14 @@ class ContinuousEngine:
              "draft_tokens", "accepted_tokens", "spec_rounds",
              # weight pushes applied at the drain barrier, and admissions
              # deferred by the step-token budget
-             "weight_pushes", "budget_deferrals", "compiles"],
+             "weight_pushes", "budget_deferrals", "compiles",
+             # fault tolerance: client cancellations, elapsed deadlines,
+             # load-shed requests, bounded-queue submit rejections,
+             # out-of-order (head-of-line window) admissions, and
+             # per-request isolated faults (the request died, not the
+             # engine)
+             "cancels", "deadline_expired", "sheds", "overloads",
+             "admit_skips", "request_faults"],
             local={"admit_steps":
                    collections.deque(maxlen=self._admit_window)})
         self._next_rid = 0
@@ -481,6 +521,16 @@ class ContinuousEngine:
                 f"> pool capacity {self.kv.num_blocks}")
 
     def submit(self, req: Request) -> None:
+        if self.max_waiting is not None \
+                and len(self.waiting) >= self.max_waiting:
+            # admission backpressure: fast-fail instead of growing an
+            # unbounded backlog (the caller sees saturation NOW, not as
+            # a deadline blowout minutes later)
+            self.stats["overloads"] += 1
+            raise EngineOverloaded(
+                f"waiting queue full ({len(self.waiting)} >= max_waiting "
+                f"{self.max_waiting}); retry later or raise "
+                f"REPRO_MAX_WAITING")
         self.validate(req)
         req.rid = self._next_rid
         self._next_rid += 1
@@ -560,6 +610,14 @@ class ContinuousEngine:
                      pool_used=self.kv.used_blocks,
                      pool_free=self.kv.free_blocks,
                      phase="spec" if self.spec_steps else "decode")
+        if self.faults.enabled:
+            # "slow": a straggler step (param = seconds); "step": an
+            # unattributable engine-level exception — nothing ties it to
+            # one request, so it propagates to the frontend supervisor
+            if self.faults.fires("slow"):
+                time.sleep(self.faults.param("slow", 0.02))
+            self.faults.check("step")
+        self._expire_deadlines()
         self._retire()
         self._apply_push_if_drained()
         self._admit()
@@ -655,6 +713,143 @@ class ContinuousEngine:
         self.tables[i] = self.trash
         self.lengths[i] = 0
 
+    # ------------------------------------------------------ fault tolerance
+    # terminal failure bookkeeping: status -> (stats counter, trace event)
+    _FAIL_KINDS = {"cancelled": ("cancels", "req.cancelled"),
+                   "deadline": ("deadline_expired", "req.deadline_expired"),
+                   "shed": ("sheds", "req.shed"),
+                   "failed": ("request_faults", "req.failed")}
+
+    def _fail_waiting(self, req: Request, error: Exception,
+                      status: str) -> None:
+        """Terminally fail a request that never reached a slot (no device
+        state, no blocks — just stamp the typed outcome)."""
+        req.error = error
+        req.status = status
+        req.t_finish = time.perf_counter()
+        counter, event = self._FAIL_KINDS[status]
+        self.stats[counter] += 1
+        self.tracer.instant(event, req=req.rid, error=repr(error))
+
+    def _retire_slot_error(self, i: int, error: Exception, status: str,
+                           donate: bool) -> None:
+        """Retire slot ``i`` mid-flight with a typed error.
+
+        Mirrors ``_finish``'s block disposal: with ``donate=True`` the KV
+        actually WRITTEN so far (prompt prefix + decoded tokens) is
+        inserted into the radix tree — a cancelled/expired agentic prompt
+        still seeds the prefix cache for its successors.  ``donate=False``
+        (an isolated fault: the KV may be suspect) releases the blocks
+        without caching them.  Either way every block this slot held goes
+        back through the refcount machinery — retirement can never leak."""
+        s = self.slots[i]
+        req = s.req
+        # KV exists up to the slot's cached length; a slot still mid-
+        # chunked-prefill has only prefilled s.pos positions (lengths[i]
+        # stays 0 until the final span installs the decode view)
+        kv_len = int(self.lengths[i]) if s.pending is not None else s.pos
+        donate = donate and self.prefix is not None and kv_len > 0 \
+            and s.version == self.weight_version
+        if donate:
+            toks = (list(map(int, req.prompt)) + s.out)[:kv_len]
+            ncover = blocks_for(kv_len, self.block_size)
+            self.prefix.insert(toks, s.blocks[:ncover])
+            if s.blocks[ncover:]:
+                self.kv.release(s.blocks[ncover:])
+        elif self.prefix is not None:
+            self.kv.release(s.blocks)
+        else:
+            self.kv.free(s.blocks)
+        self.slots[i] = None
+        self.tables[i] = self.trash
+        self.lengths[i] = 0
+        req.error = error
+        req.status = status
+        req.t_finish = time.perf_counter()
+        counter, event = self._FAIL_KINDS[status]
+        self.stats[counter] += 1
+        self.tracer.instant(event, req=req.rid, slot=i, kv_len=kv_len,
+                            donated=bool(donate), error=repr(error))
+
+    def _isolate_fault(self, req: Request, error: Exception) -> None:
+        """Per-request fault isolation: an exception attributable to ONE
+        request (its admission or its prefill span) kills that request
+        with a typed terminal error and leaves the engine serving."""
+        slot = next((i for i, s in enumerate(self.slots)
+                     if s is not None and s.req is req), None)
+        if slot is not None:
+            # the fault hit after slot install (e.g. mid-prefill): the
+            # slot's KV is suspect, so release without donating
+            self._retire_slot_error(slot, error, "failed", donate=False)
+        else:
+            self._fail_waiting(req, error, "failed")
+
+    def _expire_deadlines(self) -> None:
+        """Retire every request whose ``deadline_s`` budget (relative to
+        t_submit) has elapsed — queued or mid-flight.  Mid-flight expiry
+        donates written KV through the radix path, exactly like a client
+        cancellation."""
+        now = time.perf_counter()
+
+        def expired(r: Request) -> bool:
+            return r.deadline_s is not None and r.t_submit is not None \
+                and now - r.t_submit > r.deadline_s
+
+        for i, s in enumerate(self.slots):
+            if s is not None and expired(s.req):
+                self._retire_slot_error(
+                    i, DeadlineExceeded(
+                        f"request {s.req.rid} exceeded deadline_s="
+                        f"{s.req.deadline_s} mid-flight"),
+                    "deadline", donate=True)
+        for r in [r for r in self.waiting if expired(r)]:
+            self.waiting.remove(r)
+            self._fail_waiting(
+                r, DeadlineExceeded(f"request {r.rid} exceeded deadline_s="
+                                    f"{r.deadline_s} while queued"),
+                "deadline")
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel one request by id, queued or mid-flight.
+
+        A mid-flight cancellation retires the slot immediately — its
+        blocks are DONATED to the prefix cache (the cancelled prefix
+        still seeds future requests), not just freed.  Returns False if
+        the rid is unknown or already terminal (cancellation races
+        completion; the caller keeps whichever outcome landed first)."""
+        for r in self.waiting:
+            if r.rid == rid:
+                self.waiting.remove(r)
+                self._fail_waiting(
+                    r, RequestCancelled(f"request {rid} cancelled while "
+                                        f"queued"), "cancelled")
+                return True
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid == rid:
+                self._retire_slot_error(
+                    i, RequestCancelled(f"request {rid} cancelled "
+                                        f"mid-flight"),
+                    "cancelled", donate=True)
+                return True
+        return False
+
+    def respawn(self) -> "ContinuousEngine":
+        """Build a FRESH engine with this engine's geometry and policy
+        (the supervisor's restart path: device pool, block tables, and
+        prefix cache are rebuilt from scratch — in-flight KV died with
+        the crash).  Weights are the newest this engine was handed: a
+        push still waiting at the drain barrier wins over the running
+        params.  The registry/tracer/fault-injector are SHARED so
+        counters, traces, and the injection schedule continue across the
+        restart (a ``crash@3`` clause must not re-fire at the respawned
+        engine's step 3)."""
+        params, version = (self._pending_push
+                           if self._pending_push is not None
+                           else (self.params, self.weight_version))
+        return ContinuousEngine(self.cfg, params, weight_version=version,
+                                registry=self.registry, tracer=self.tracer,
+                                faults=self.faults, **self._init_kw)
+
     # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
         if self._pending_push is not None:
@@ -663,9 +858,66 @@ class ContinuousEngine:
             if not self._step_budget_allows():
                 self.stats["budget_deferrals"] += 1
                 return
-            if not self._try_admit(self.waiting[0]):
-                return
-            self.waiting.popleft()
+            head = self.waiting[0]
+            try:
+                admitted = self._try_admit(head)
+            except Exception as e:
+                # attributable to THIS request: isolate it, keep serving
+                self.waiting.popleft()
+                self._isolate_fault(head, e)
+                continue
+            if admitted:
+                self.waiting.popleft()
+                continue
+            # head can't admit (not enough free blocks): probe a bounded
+            # window behind it for a smaller request that fits, instead
+            # of stalling ALL admission on the head
+            if self._admit_from_window():
+                continue
+            self._shed_if_wedged()
+            return
+
+    def _admit_from_window(self) -> bool:
+        """Out-of-order admission behind a stalled head: try up to
+        ``admit_hol_window`` queued requests for one that fits the free
+        blocks the head cannot use.  Bounded so a huge head is delayed at
+        most a window's worth of queue positions, not starved.  Returns
+        True when the queue changed (admit or isolated fault) — the
+        caller re-enters the admission loop."""
+        limit = min(self.admit_hol_window, len(self.waiting) - 1)
+        for k in range(1, limit + 1):
+            req = self.waiting[k]
+            try:
+                ok = self._try_admit(req)
+            except Exception as e:
+                del self.waiting[k]
+                self._isolate_fault(req, e)
+                return True
+            if ok:
+                del self.waiting[k]
+                self.stats["admit_skips"] += 1
+                return True
+        return False
+
+    def _shed_if_wedged(self) -> None:
+        """Admission failed with an EMPTY engine: no live sequence will
+        ever release blocks, so the queue would wedge forever (this was
+        the engine-killing ``CacheFull`` crash).  Every free-list block
+        is pinned outside the engine — session-pinned, or an injected
+        alloc storm — so shed the DEEPEST-queued request with a typed
+        per-request error.  One shed per step: pressure drains the queue
+        tail-first while the head keeps its chance at admission, and
+        each shed is individually observable."""
+        if any(s is not None for s in self.slots) or not self.waiting:
+            return          # live sequences will release blocks: just wait
+        req = self.waiting.pop()
+        self._fail_waiting(
+            req, RequestShed(
+                f"pool exhausted with an empty engine "
+                f"({self.kv.free_blocks}/{self.kv.num_blocks} blocks free "
+                f"after eviction; pinned by sessions?): shed request "
+                f"{req.rid} at queue depth {len(self.waiting) + 1}"),
+            "shed")
 
     def _step_budget_allows(self) -> bool:
         """Accept-length-aware slot budgeting (``step_token_budget``).
@@ -688,6 +940,8 @@ class ContinuousEngine:
         return (live + 1) * per_slot <= self.step_token_budget
 
     def _try_admit(self, req: Request) -> bool:
+        if self.faults.enabled:
+            self.faults.check("admit", rid=req.rid)
         bs = self.block_size
         plen = len(req.prompt)
         m, mblocks = (self.prefix.match(req.prompt, limit=plen - 1)
@@ -711,57 +965,66 @@ class ContinuousEngine:
                 try:
                     fresh = self.kv.alloc(total)
                 except CacheFull:
-                    return self._admit_stalled()
+                    return False    # stalled: _admit decides what's next
             else:
-                return self._admit_stalled()
+                return False
+        # from here the admission HOLDS references (owned = one ref per
+        # block); any exception before the slot install must return them
+        # or per-request isolation would leak blocks
+        owned = mblocks + fresh
+        installed = False
+        try:
+            if partial:
+                # the match ends inside a shared block: fork it so the
+                # suffix write never touches the cached copy
+                src, dst = mblocks[-1], fresh[0]
+                self.pool = self._cow(self.pool,
+                                      jnp.asarray(src, jnp.int32),
+                                      jnp.asarray(dst, jnp.int32))
+                self.kv.release([src])
+                blocks = mblocks[:n_full] + fresh
+                owned = blocks
+                self.stats["cow_forks"] += 1
+            else:
+                blocks = mblocks + fresh
 
-        if partial:
-            # the match ends inside a shared block: fork it so the suffix
-            # write never touches the cached copy
-            src, dst = mblocks[-1], fresh[0]
-            self.pool = self._cow(self.pool, jnp.asarray(src, jnp.int32),
-                                  jnp.asarray(dst, jnp.int32))
-            self.kv.release([src])
-            blocks = mblocks[:n_full] + fresh
-            self.stats["cow_forks"] += 1
-        else:
-            blocks = mblocks + fresh
-
-        # version-tag invariant: every aliased block was written under the
-        # CURRENT weights (match() refuses older stamps; fresh allocations
-        # are stamped now, and the drain barrier keeps this version live
-        # until the sequence retires)
-        assert all(self.kv.block_version(b) == self.weight_version
-                   for b in blocks), "stale block aliased into admission"
-        slot = self.slots.index(None)
-        row = np.full((self.table_width,), self.trash, np.int32)
-        row[:len(blocks)] = blocks
-        if self.hybrid:
-            self.pool = self._ssm_reset(self.pool,
-                                        jnp.asarray(slot, jnp.int32))
-        s = _Active(req, blocks, row, pos=m, version=self.weight_version)
-        self.slots[slot] = s
-        self.stats["prefills"] += 1
-        self.stats["cached_tokens"] += m
-        self.stats["prefill_tokens"] += plen - m
-        self.stats["admit_steps"].append(self.stats["steps"])
-        if req.t_submit is not None:
-            self.registry.observe(
-                "engine.queue_ms",
-                (time.perf_counter() - req.t_submit) * 1e3)
-        self.tracer.instant("req.admitted", req=req.rid, slot=slot,
-                            cached_tokens=m, blocks=len(blocks),
-                            version=self.weight_version)
-        if self.prefill_chunk is None:
-            self._prefill_span(slot, s, span=plen - m)  # whole suffix
+            # version-tag invariant: every aliased block was written under
+            # the CURRENT weights (match() refuses older stamps; fresh
+            # allocations are stamped now, and the drain barrier keeps
+            # this version live until the sequence retires)
+            assert all(self.kv.block_version(b) == self.weight_version
+                       for b in blocks), "stale block aliased into admission"
+            slot = self.slots.index(None)
+            row = np.full((self.table_width,), self.trash, np.int32)
+            row[:len(blocks)] = blocks
+            if self.hybrid:
+                self.pool = self._ssm_reset(self.pool,
+                                            jnp.asarray(slot, jnp.int32))
+            s = _Active(req, blocks, row, pos=m,
+                        version=self.weight_version)
+            self.slots[slot] = s
+            installed = True
+            self.stats["prefills"] += 1
+            self.stats["cached_tokens"] += m
+            self.stats["prefill_tokens"] += plen - m
+            self.stats["admit_steps"].append(self.stats["steps"])
+            if req.t_submit is not None:
+                self.registry.observe(
+                    "engine.queue_ms",
+                    (time.perf_counter() - req.t_submit) * 1e3)
+            self.tracer.instant("req.admitted", req=req.rid, slot=slot,
+                                cached_tokens=m, blocks=len(blocks),
+                                version=self.weight_version)
+            if self.prefill_chunk is None:
+                self._prefill_span(slot, s, span=plen - m)  # whole suffix
+        except Exception:
+            # past the slot install the slot owns the blocks and
+            # _isolate_fault retires it (releasing them); before it, we
+            # still hold them and must give them back here
+            if not installed:
+                self.kv.release(owned)
+            raise
         return True
-
-    def _admit_stalled(self) -> bool:
-        if not any(s is not None for s in self.slots):
-            raise CacheFull(
-                "cannot admit into an empty engine: pool exhausted even "
-                "after prefix-cache eviction (blocks pinned by sessions?)")
-        return False    # wait for running sequences to release blocks
 
     # ---------------------------------------------------------- prefill
     def _prefill_span(self, slot: int, s: _Active, span: int) -> None:
@@ -773,6 +1036,8 @@ class ContinuousEngine:
         the causal mask, so padded garbage would be dead weight — and the
         recurrent hybrid family could never pad anyway (pad garbage would
         advance the mamba2 state)."""
+        if self.faults.enabled:
+            self.faults.check("prefill", rid=s.req.rid)
         bs = self.block_size
         prompt, plen = s.req.prompt, len(s.req.prompt)
         start = s.pos
@@ -815,7 +1080,13 @@ class ContinuousEngine:
             return
         for i, s in enumerate(self.slots):
             if s is not None and s.pending is None:
-                self._prefill_span(i, s, span=self.prefill_chunk)
+                try:
+                    self._prefill_span(i, s, span=self.prefill_chunk)
+                except Exception as e:
+                    # attributable to this slot's request alone: retire
+                    # it (suspect KV: no donation) and keep serving
+                    self._retire_slot_error(i, e, "failed", donate=False)
+                    continue
                 self.stats["chunk_steps"] += 1
 
     # ----------------------------------------------------------- decode

@@ -26,7 +26,8 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import get_model
 from repro.serving import (AgentSession, CacheFull, ContinuousEngine,
-                           PagedKVCache, PrefixCache, Request, ServingEngine)
+                           PagedKVCache, PrefixCache, Request, RequestShed,
+                           ServingEngine)
 
 
 def _tiny_gqa():
@@ -310,8 +311,8 @@ def test_agent_session_reuses_history_and_matches_oracle(gqa_setup):
 
 def test_session_pin_survives_eviction_pressure(gqa_setup):
     """A pinned conversation cannot be LRU-evicted: cold traffic that needs
-    more blocks than remain must raise CacheFull rather than reclaim the
-    session's history."""
+    more blocks than remain is shed with a typed error rather than allowed
+    to reclaim the session's history."""
     cfg, params = gqa_setup
     eng = ContinuousEngine(cfg, params, max_batch=1, block_size=8,
                            num_blocks=8, max_len=64)
@@ -319,8 +320,9 @@ def test_session_pin_survives_eviction_pressure(gqa_setup):
     sess.send(np.arange(3, 19, dtype=np.int32), max_new=4)   # pins blocks
     pinned = sess.pinned_blocks
     assert pinned > 0
-    with pytest.raises(CacheFull):
-        eng.serve([Request(prompt=np.full(40, 7, np.int32), max_new=8)])
+    [cold] = eng.serve([Request(prompt=np.full(40, 7, np.int32), max_new=8)])
+    assert cold.status == "shed"
+    assert isinstance(cold.error, RequestShed) and cold.out is None
     assert sess.pinned_blocks == pinned                      # untouched
     # after the session releases, the same request fits via eviction
     sess.close()

@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test collect bench-serving bench-smoke fault-smoke dev-deps
+.PHONY: test collect bench-serving bench-smoke fault-smoke pd-smoke dev-deps
 
 test:
 	$(PY) -m pytest -q
@@ -53,6 +53,22 @@ fault-smoke:
 	REPRO_FAULTS="prefill~0.15,beat~0.5" REPRO_FAULTS_SEED=3 \
 		$(PY) -m pytest -q tests/test_fault_tolerance.py -k env_spec
 	$(PY) -m benchmarks.run --only fault_tolerance --fast --json BENCH_faults.json
+
+# The disaggregated-serving smoke CI's pd-smoke job runs: the live
+# two-engine benchmark (DisaggServer + MigrationChannel) under two fixed
+# fault specs — one migration-path trace (probabilistic xfer drops + a
+# deterministic route hedge) and one prefill-engine crash (degraded
+# colocated serving during the outage, respawn, fail-back).  The bars
+# are enforced inside the benchmark: zero requests lost, every output
+# byte-identical to a single-engine oracle, p95 TPOT disaggregated <=
+# colocated, migrated-block radix reuse > 0.  Both runs merge into
+# BENCH_pd.json (uploadable artifact).
+pd-smoke:
+	rm -f BENCH_pd.json
+	REPRO_FAULTS="xfer~0.35,route@2" REPRO_FAULTS_SEED=2 \
+		$(PY) -m benchmarks.pd_disagg --live --fast --json BENCH_pd.json
+	REPRO_FAULTS="crash@3" REPRO_FAULTS_SEED=6 \
+		$(PY) -m benchmarks.pd_disagg --live --fast --json BENCH_pd.json
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt

@@ -1,15 +1,67 @@
-"""§3.6.2 tail-latency benchmarks: PD disaggregation, MTP speculative
-decode, FP8-vs-bf16 rollouts — all on the queueing simulator."""
+"""§3.6.2 PD disaggregation: queueing-simulator tail latency + LIVE
+two-engine serving with fault-tolerant KV-block migration.
+
+Default (``run()`` / ``benchmarks.run``): the analytical queueing
+simulator rows (colocated vs disaggregated vs +MTP vs +FP8) — cheap,
+deterministic, the oracle this suite's live half is validated against.
+
+``--live`` (or ``run(live=True)``) drives a real ``DisaggServer`` — two
+``ContinuousEngine``s bridged by the ``MigrationChannel`` — and ENFORCES
+the robustness contract as hard bars:
+
+  (a) **fault trace** — a mixed cohort served while the injector fires
+      migration (``xfer``/``route``) faults and ONE prefill-engine crash
+      (``REPRO_FAULTS`` overrides the default trace; clauses are
+      partitioned by point — ``xfer``/``route`` arm the router,
+      everything else arms the prefill tier).  Bars (enforced):
+        * ZERO requests lost — every submission reaches a terminal ok
+          state, none hangs past its result() timeout;
+        * EVERY output byte-identical to a fault-free single-engine
+          oracle (migration faults degrade to colocated prefill, never
+          to different tokens);
+        * crash armed => the tier goes down, requests submitted DURING
+          the outage are served degraded-colocated, the tier respawns
+          and the router fails back (post-fail-back traffic migrates
+          again);
+        * xfer armed => at least one migration retry or typed
+          ``MigrationFailed`` fallback actually happened.
+  (b) **decode interference** — the same mixed long-prefill + short
+      decode-stream workload against a colocated single engine and the
+      disaggregated pair; live ``latency_summary()`` p95 TPOT
+      disaggregated must be <= colocated (long chunked prefills steal
+      decode steps only in the colocated topology), and the direction
+      must agree with the queueing simulator's p99-slowdown prediction.
+  (c) **migrated-prefix reuse** — a two-turn session routed through the
+      prefill tier both turns: the decode tier's radix lookup for turn
+      2 must hit blocks that ARRIVED by migration (reuse > 0), i.e. the
+      version-stamped handoff keeps migrated blocks reusable, not just
+      readable.
+
+  PYTHONPATH=src python -m benchmarks.pd_disagg --live [--fast] \
+      [--json PATH]
+"""
 from __future__ import annotations
 
 import time
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 from repro.serving.pd_sim import ServingConfig, Workload, simulate
 
+_EKW = dict(max_batch=4, block_size=8, num_blocks=192, max_len=256,
+            prefill_chunk=32)
+_PD_THRESHOLD = 64
+_RESULT_TIMEOUT_S = 180.0
+# default live fault trace: one migration fault (2nd xfer attempt) and
+# one prefill serve-loop crash (4th busy check) — exercises rungs 2 and
+# 3 of the degradation ladder in a single run
+_DEFAULT_TRACE = "xfer@1,crash@3"
 
-def run(**kw):
+
+def _sim_rows(fast: bool) -> Tuple[List[dict], float, float]:
     rows = []
-    w = Workload(n_rollouts=128, turns=4,
+    w = Workload(n_rollouts=64 if fast else 128, turns=4,
                  prefill_tokens_per_turn=131072,  # long-prefix multi-turn
                  decode_tokens_mean=256, decode_tokens_tail=2048,
                  tail_frac=0.15)
@@ -24,9 +76,11 @@ def run(**kw):
                                      prefill_frac=0.34,
                                      accept_length=2.76, dtype_speed=1.6)),
     ]
+    slowdowns = {}
     for name, cfg in cases:
         t0 = time.time()
         m = simulate(w, cfg, seed=0)
+        slowdowns[name] = m["p99_slowdown"]
         rows.append({
             "name": f"pd_disagg/{name}",
             "us_per_call": (time.time() - t0) * 1e6,
@@ -34,4 +88,350 @@ def run(**kw):
                         f"max={m['max_s']:.1f}s "
                         f"p99_slowdown={m['p99_slowdown']:.2f}x"),
         })
+    return rows, slowdowns["colocated"], slowdowns["pd-disaggregated"]
+
+
+# --------------------------------------------------------------- live mode
+def _cfg():
+    from repro.configs import get_smoke_config
+    return get_smoke_config("yi_6b").replace(
+        d_model=128, num_heads=2, num_kv_heads=2, head_dim=32, d_ff=256,
+        vocab_size=256, dsa=None)
+
+
+def _mixed_prompts(cfg, n_long: int, n_short: int, seed: int):
+    """Interleaved (prompt, is_long) workload: long prompts cross the
+    pd threshold (prefill-tier path), shorts stay colocated."""
+    rng = np.random.default_rng(seed)
+    longs = [rng.integers(3, cfg.vocab_size,
+                          size=int(rng.integers(96, 176))).tolist()
+             for _ in range(n_long)]
+    shorts = [rng.integers(3, cfg.vocab_size,
+                           size=int(rng.integers(8, 24))).tolist()
+              for _ in range(n_short)]
+    out = []
+    for i in range(max(n_long, n_short)):
+        if i < n_short:
+            out.append((shorts[i], False))
+        if i < n_long:
+            out.append((longs[i], True))
+    return out
+
+
+def _oracle_outputs(cfg, params, prompts, max_new) -> List[List[int]]:
+    """Fault-free single-engine greedy outputs (the unique correct
+    output per prompt at these weights)."""
+    from repro.faults import FaultInjector
+    from repro.serving import AsyncFrontend, ContinuousEngine
+    fe = AsyncFrontend(ContinuousEngine(cfg, params,
+                                        faults=FaultInjector(""), **_EKW))
+    hs = [fe.submit(p, max_new=max_new) for p in prompts]
+    outs = [list(fe.result(h, timeout=_RESULT_TIMEOUT_S).out) for h in hs]
+    fe.close()
+    return outs
+
+
+def _split_env_spec(spec: str) -> Tuple[str, str]:
+    """Partition a REPRO_FAULTS spec by point: ``xfer``/``route`` clauses
+    arm the ROUTER injector, everything else the PREFILL tier (so one
+    env drives the whole pd-smoke CI matrix)."""
+    router, prefill = [], []
+    for clause in spec.split(","):
+        clause = clause.strip()
+        if not clause:
+            continue
+        point = clause.split("@")[0].split("~")[0].split("=")[0].strip()
+        (router if point in ("xfer", "route") else prefill).append(clause)
+    return ",".join(router), ",".join(prefill)
+
+
+def _wait(pred, timeout_s: float, what: str) -> None:
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if pred():
+            return
+        time.sleep(0.05)
+    raise AssertionError(f"timed out ({timeout_s:.0f}s) waiting for {what}")
+
+
+def _collect(srv, handles, oracle, lost_label: str):
+    """Drain a cohort; BAR: zero lost + byte parity with the oracle."""
+    lost = 0
+    for (idx, h) in handles:
+        try:
+            req = srv.result(h, timeout=_RESULT_TIMEOUT_S)
+        except TimeoutError:
+            lost += 1
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(req.out), np.asarray(oracle[idx], np.int32),
+            err_msg=f"{lost_label}: request {idx} diverged from oracle")
+    assert lost == 0, f"{lost_label}: {lost} requests lost"
+
+
+def _live_fault_trace(cfg, params, fast: bool) -> dict:
+    from repro import flags
+    from repro.faults import FaultInjector
+    from repro.serving import DisaggServer
+
+    env_spec = flags.fault_spec()
+    router_spec, prefill_spec = _split_env_spec(env_spec or _DEFAULT_TRACE)
+    seed = flags.fault_seed()
+    router_faults = FaultInjector(router_spec, seed=seed)
+    prefill_faults = FaultInjector(prefill_spec, seed=seed)
+    xfer_armed = router_faults.armed("xfer") or router_faults.armed("route")
+    crash_armed = prefill_faults.armed("crash")
+
+    n_long, n_short, max_new = (3, 2, 6) if fast else (5, 3, 8)
+    mixed = _mixed_prompts(cfg, n_long, n_short, seed=23)
+    during = [p for p, _ in _mixed_prompts(cfg, 2, 0, seed=29)]
+    after = [p for p, _ in _mixed_prompts(cfg, 2, 0, seed=31)]
+    all_prompts = [p for p, _ in mixed] + during + after
+    oracle = _oracle_outputs(cfg, params, all_prompts, max_new)
+
+    srv = DisaggServer(cfg, params, decode_kw=dict(_EKW),
+                       pd_threshold=_PD_THRESHOLD,
+                       migrate_retries=1, migrate_backoff_s=0.001,
+                       respawn_delay_s=0.05, heartbeat_timeout_s=1.0,
+                       faults=router_faults, prefill_faults=prefill_faults)
+    try:
+        # cohort 1: mixed traffic while the injected trace fires
+        hs = [(i, srv.submit(p, max_new=max_new))
+              for i, (p, _) in enumerate(mixed)]
+        _collect(srv, hs, oracle, "cohort-1 (under faults)")
+
+        if crash_armed:
+            # cohort 2 submitted DURING the outage: the router must serve
+            # it degraded-colocated, not queue it behind a dead tier
+            _wait(lambda: srv.degraded or srv.stats["failbacks"] > 0,
+                  60, "tier-down after the injected prefill crash")
+            base = len(mixed)
+            hs = [(base + i, srv.submit(p, max_new=max_new))
+                  for i, p in enumerate(during)]
+            _collect(srv, hs, oracle, "cohort-2 (during outage)")
+            # respawn + fail-back, then cohort 3 must migrate again
+            _wait(lambda: (srv.stats["prefill_respawns"] >= 1
+                           and not srv.degraded),
+                  60, "prefill-tier respawn + fail-back")
+            mig0 = srv.stats["migrations"]
+            base = len(mixed) + len(during)
+            hs = [(base + i, srv.submit(p, max_new=max_new))
+                  for i, p in enumerate(after)]
+            _collect(srv, hs, oracle, "cohort-3 (post-fail-back)")
+            assert srv.stats["tier_down_events"] >= 1
+            assert srv.stats["prefill_respawns"] >= 1
+            assert srv.stats["failbacks"] >= 1
+            assert srv.stats["degraded_served"] + \
+                srv.stats["colocated_fallbacks"] >= 1, dict(srv.stats)
+            assert srv.stats["migrations"] > mig0, \
+                "no migration after fail-back: the split never recovered"
+        if xfer_armed:
+            hit = (srv.stats["migration_retries"]
+                   + srv.stats["migration_failures"]
+                   + srv.stats["route_faults"])
+            assert hit >= 1, (
+                f"xfer/route armed but never bit: {dict(srv.stats)}")
+        stats = dict(srv.stats)
+        snap = srv.registry.snapshot()
+    finally:
+        srv.close()
+    n_total = len(all_prompts) if crash_armed else len(mixed)
+    return {
+        "name": "pd_disagg/live_fault_trace",
+        "us_per_call": 0.0,
+        "derived": (f"{n_total} reqs under "
+                    f"'{env_spec or _DEFAULT_TRACE}' (seed={seed}): 0 lost,"
+                    f" ALL byte-identical to single-engine oracle; "
+                    f"migrations={stats['migrations']} "
+                    f"retries={stats['migration_retries']} "
+                    f"failures={stats['migration_failures']} "
+                    f"fallbacks={stats['colocated_fallbacks']} "
+                    f"tier_down={stats['tier_down_events']} "
+                    f"respawns={stats['prefill_respawns']} "
+                    f"failbacks={stats['failbacks']} "
+                    f"degraded_served={stats['degraded_served']}"),
+        "registry": snap,
+    }
+
+
+def _drain_all(submit, result, work, max_new_short, max_new_long):
+    handles = []
+    for p, is_long in work:
+        handles.append(submit(p, max_new_long if is_long
+                              else max_new_short))
+    for h in handles:
+        result(h)
+
+
+def _live_interference(cfg, params, fast: bool,
+                       sim_colocated: float, sim_disagg: float) -> dict:
+    """Same workload through both topologies; BAR: p95 TPOT
+    disaggregated <= colocated, agreeing with the simulator."""
+    from repro.faults import FaultInjector
+    from repro.serving import AsyncFrontend, ContinuousEngine, DisaggServer
+
+    n_long, n_short = (3, 4) if fast else (5, 6)
+    max_new_short, max_new_long = (16, 4) if fast else (24, 6)
+    warm = _mixed_prompts(cfg, 1, 1, seed=41)
+    work = _mixed_prompts(cfg, n_long, n_short, seed=43)
+
+    co = AsyncFrontend(ContinuousEngine(cfg, params,
+                                        faults=FaultInjector(""), **_EKW))
+    try:
+        _drain_all(lambda p, m: co.submit(p, max_new=m),
+                   lambda h: co.result(h, timeout=_RESULT_TIMEOUT_S),
+                   warm, max_new_short, max_new_long)
+        co.registry.reset_histograms("engine")
+        _drain_all(lambda p, m: co.submit(p, max_new=m),
+                   lambda h: co.result(h, timeout=_RESULT_TIMEOUT_S),
+                   work, max_new_short, max_new_long)
+        co_tpot = co.latency_summary()["tpot_ms"]
+    finally:
+        co.close()
+
+    srv = DisaggServer(cfg, params, decode_kw=dict(_EKW),
+                       pd_threshold=_PD_THRESHOLD,
+                       heartbeat_timeout_s=30.0,
+                       faults=FaultInjector(""),
+                       prefill_faults=FaultInjector(""))
+    try:
+        _drain_all(lambda p, m: srv.submit(p, max_new=m),
+                   lambda h: srv.result(h, timeout=_RESULT_TIMEOUT_S),
+                   warm, max_new_short, max_new_long)
+        srv.registry.reset_histograms("engine")
+        _drain_all(lambda p, m: srv.submit(p, max_new=m),
+                   lambda h: srv.result(h, timeout=_RESULT_TIMEOUT_S),
+                   work, max_new_short, max_new_long)
+        pd_tpot = srv.latency_summary()["tpot_ms"]
+        migrations = srv.stats["migrations"]
+    finally:
+        srv.close()
+
+    assert migrations >= 1, "interference run never exercised the split"
+    assert pd_tpot["p95"] <= co_tpot["p95"], (
+        f"disaggregated p95 TPOT {pd_tpot['p95']:.2f}ms > colocated "
+        f"{co_tpot['p95']:.2f}ms — the split made decode WORSE")
+    # direction must agree with the analytical oracle
+    assert sim_disagg <= sim_colocated, (
+        f"simulator disagrees with itself: disagg p99_slowdown "
+        f"{sim_disagg:.2f} > colocated {sim_colocated:.2f}")
+    return {
+        "name": "pd_disagg/live_interference",
+        "us_per_call": pd_tpot["p95"] * 1e3,
+        "derived": (f"mixed {n_long} long + {n_short} short streams: "
+                    f"p95 TPOT disagg={pd_tpot['p95']:.2f}ms <= "
+                    f"colocated={co_tpot['p95']:.2f}ms "
+                    f"(p50 {pd_tpot['p50']:.2f} vs {co_tpot['p50']:.2f}); "
+                    f"sim p99_slowdown agrees: "
+                    f"{sim_disagg:.2f}x <= {sim_colocated:.2f}x; "
+                    f"{migrations} migrations"),
+    }
+
+
+def _live_prefix_reuse(cfg, params, fast: bool) -> dict:
+    """Two-turn session through the prefill tier: turn 2's decode-side
+    radix lookup must hit MIGRATED blocks (reuse survives the handoff)."""
+    from repro.faults import FaultInjector
+    from repro.serving import DisaggServer
+
+    max_new = 6 if fast else 8
+    rng = np.random.default_rng(47)
+    p1 = rng.integers(3, cfg.vocab_size, size=120).tolist()
+    suffix = rng.integers(3, cfg.vocab_size, size=24).tolist()
+
+    srv = DisaggServer(cfg, params, decode_kw=dict(_EKW),
+                       pd_threshold=_PD_THRESHOLD,
+                       heartbeat_timeout_s=30.0,
+                       faults=FaultInjector(""),
+                       prefill_faults=FaultInjector(""))
+    try:
+        out1 = list(srv.result(srv.submit(p1, max_new=max_new),
+                               timeout=_RESULT_TIMEOUT_S).out)
+        p2 = p1 + out1 + suffix
+        migrated_before_t2 = set(srv.channel.recent_migrated_blocks())
+
+        # probe the decode tier's radix tree ON ITS SERVE THREAD before
+        # turn 2 runs: how much of p2 is already cached, and do those
+        # blocks include ones that arrived by migration?
+        fe = srv.decode_frontend
+        eng = fe.engine
+
+        box = {}
+
+        def probe():
+            m, blocks = eng.prefix.match(np.asarray(p2, np.int32))
+            eng.kv.release(blocks)
+            box["matched"], box["blocks"] = m, list(blocks)
+
+        fe.call(probe)
+        matched, blocks = box["matched"], box["blocks"]
+        reused_migrated = len(set(blocks) & migrated_before_t2)
+
+        out2 = list(srv.result(srv.submit(p2, max_new=max_new),
+                               timeout=_RESULT_TIMEOUT_S).out)
+        assert len(out2) == max_new
+        migrations = srv.stats["migrations"]
+        fe.call(lambda: box.update(cached=eng.stats["cached_tokens"]))
+        cached = box["cached"]
+    finally:
+        srv.close()
+
+    assert migrations >= 2, f"both turns should migrate ({migrations})"
+    assert matched > 0, "decode radix tree cold before turn 2"
+    assert reused_migrated > 0, (
+        "turn-2 radix hit reuses ZERO migrated blocks — the version "
+        "handoff broke prefix reuse")
+    assert cached > 0
+    return {
+        "name": "pd_disagg/live_prefix_reuse",
+        "us_per_call": 0.0,
+        "derived": (f"2-turn session (120 -> {len(p1) + max_new + 24} "
+                    f"tokens): decode radix matched {matched} tokens "
+                    f"before turn 2, {reused_migrated} migrated blocks "
+                    f"reused, {migrations} migrations, "
+                    f"cached_tokens={cached}"),
+    }
+
+
+def run(fast: bool = False, live: bool = False, **kw):
+    rows, sim_co, sim_pd = _sim_rows(fast)
+    if not live:
+        return rows
+    import jax
+    from repro.models import get_model
+    cfg = _cfg()
+    params = get_model(cfg).init(jax.random.key(0), cfg)[0]
+    rows.append(_live_fault_trace(cfg, params, fast))
+    rows.append(_live_interference(cfg, params, fast, sim_co, sim_pd))
+    rows.append(_live_prefix_reuse(cfg, params, fast))
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--live", action="store_true",
+                    help="drive the real two-engine DisaggServer and "
+                         "enforce the robustness bars")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    rows = run(fast=args.fast, live=args.live)
+    registry = None
+    out_rows = []
+    for r in rows:
+        registry = r.pop("registry", None) or registry
+        print(f"{r['name']},{r['us_per_call']:.1f},"
+              f"{str(r['derived']).replace(',', ';')}")
+        out_rows.append({"name": r["name"],
+                         "us_per_call": float(r["us_per_call"]),
+                         "derived": str(r["derived"])})
+    if args.json:
+        from benchmarks.run import _write_json
+        _write_json(args.json, {"pd_disagg": {
+            "description": "S3.6.2: PD disaggregation (sim + live bars)",
+            "rows": out_rows, "registry": registry}}, args.fast)
+
+
+if __name__ == "__main__":
+    main()

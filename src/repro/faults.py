@@ -33,6 +33,15 @@ Injection points wired in this repo:
                                                         deregistration)
   ``beat``      ``HeartbeatMonitor.beat``               beat swallowed (a
                                                         lapsing server)
+  ``xfer``      ``MigrationChannel.migrate``            KV-block migration
+                                                        attempt fails
+                                                        (router retries,
+                                                        then degrades to
+                                                        colocated)
+  ``route``     ``DisaggServer`` admission router       routing decision
+                                                        hedged: the
+                                                        request goes
+                                                        colocated
   ============  ======================================  =================
 
 Spec grammar (``REPRO_FAULTS``): comma-separated clauses, each
@@ -48,6 +57,13 @@ Spec grammar (``REPRO_FAULTS``): comma-separated clauses, each
 ``REPRO_FAULTS_SEED`` (int, default 0) seeds the ``~p`` draws.  An empty
 spec disables everything: ``fires()`` is a dict lookup + early return,
 cheap enough to leave in the hot path.
+
+The spec is VALIDATED at construction: an unknown point name or a
+malformed range/probability/parameter raises ``ValueError`` naming the
+bad clause — a typo in ``REPRO_FAULTS`` must fail the run loudly, not
+silently arm nothing (the CI fault matrix would otherwise green-light a
+scenario that never ran).  ``KNOWN_POINTS`` lists the wired points; an
+embedder adding its own sites passes ``points=`` to extend the set.
 
 Example::
 
@@ -80,12 +96,22 @@ class InjectedFault(RuntimeError):
         super().__init__(f"injected fault: {point}@{n}{at}")
 
 
+# Every injection point wired in this repo.  _parse validates clause
+# point names against this set so a REPRO_FAULTS typo fails loudly.
+KNOWN_POINTS = frozenset({
+    "alloc", "admit", "prefill", "step", "slow", "crash", "worker",
+    "beat", "xfer", "route",
+})
+
+
 class FaultInjector:
     """Named injection points firing on a deterministic schedule."""
 
-    def __init__(self, spec: str = "", seed: int = 0):
+    def __init__(self, spec: str = "", seed: int = 0,
+                 points: frozenset = KNOWN_POINTS):
         self.spec = spec
         self.seed = seed
+        self._points = points
         self._ranges: Dict[str, List[Tuple[int, int]]] = {}
         self._prob: Dict[str, float] = {}
         self._param: Dict[str, float] = {}
@@ -97,20 +123,57 @@ class FaultInjector:
         # disabled injectors cost one attribute check at each site
         self.enabled = bool(self._ranges or self._prob)
 
+    def _bad(self, clause: str, why: str) -> ValueError:
+        return ValueError(f"bad fault clause {clause!r}: {why} "
+                          f"(spec {self.spec!r})")
+
+    def _check_point(self, point: str, clause: str) -> str:
+        if not point:
+            raise self._bad(clause, "empty point name")
+        if point not in self._points:
+            raise self._bad(
+                clause, f"unknown point {point!r}; known points: "
+                f"{', '.join(sorted(self._points))}")
+        return point
+
     def _parse(self, clause: str) -> None:
+        orig = clause
         if "=" in clause:
             clause, val = clause.split("=", 1)
             point = clause.split("@")[0].split("~")[0]
-            self._param[point] = float(val)
+            try:
+                self._param[point] = float(val)
+            except ValueError:
+                raise self._bad(orig, f"parameter {val!r} is not a float") \
+                    from None
         if "@" in clause:
             point, when = clause.split("@", 1)
+            self._check_point(point, orig)
+            if "~" in when:
+                raise self._bad(orig, "mixes @ (call index) with ~ "
+                                      "(probability); pick one")
             lo, _, hi = when.partition("..")
-            lo = int(lo)
-            self._ranges.setdefault(point, []).append(
-                (lo, int(hi) if hi else lo))
+            try:
+                lo = int(lo)
+                hi = int(hi) if hi else lo
+            except ValueError:
+                raise self._bad(orig, f"range {when!r} is not "
+                                      f"an int or int..int") from None
+            if lo < 0 or hi < lo:
+                raise self._bad(orig, f"range {when!r} must satisfy "
+                                      f"0 <= i <= j")
+            self._ranges.setdefault(point, []).append((lo, hi))
         elif "~" in clause:
             point, p = clause.split("~", 1)
-            self._prob[point] = float(p)
+            self._check_point(point, orig)
+            try:
+                prob = float(p)
+            except ValueError:
+                raise self._bad(orig, f"probability {p!r} is not a float") \
+                    from None
+            if not 0.0 <= prob <= 1.0:
+                raise self._bad(orig, f"probability {prob} outside [0, 1]")
+            self._prob[point] = prob
             # a per-point PRNG keyed on (seed, point): the draw sequence
             # depends only on how often THIS point is hit, never on the
             # interleaving with other points
@@ -118,6 +181,7 @@ class FaultInjector:
                 (self.seed << 32) ^ zlib.crc32(point.encode()))
         elif clause:
             # bare "point" = fire every call
+            self._check_point(clause, orig)
             self._ranges.setdefault(clause, []).append((0, 1 << 62))
 
     @classmethod

@@ -136,6 +136,56 @@ def max_restarts_default() -> int:
     return int(os.environ.get("REPRO_MAX_RESTARTS", "3"))
 
 
+def pd_threshold_default() -> int:
+    """Prompt-length cutoff for the disagg router (``REPRO_PD_THRESHOLD``,
+    tokens, default 64).  Prompts at least this long take the
+    prefill-tier path (prefill remotely, migrate KV blocks, decode on
+    the decode tier); shorter prompts prefill colocated on the decode
+    engine — the migration overhead only pays for itself on prefills
+    long enough to stall decode streams.  An explicit
+    ``DisaggServer(pd_threshold=...)`` always wins."""
+    return int(os.environ.get("REPRO_PD_THRESHOLD", "64"))
+
+
+def migrate_timeout_s() -> float:
+    """Per-attempt wall-clock budget for one KV-block migration
+    (``REPRO_MIGRATE_TIMEOUT_S``, seconds, default 5.0).  An attempt
+    that exceeds it counts as failed and consumes one retry; after the
+    retry budget the router degrades the request to colocated prefill
+    instead of stalling it behind a wedged transfer."""
+    return float(os.environ.get("REPRO_MIGRATE_TIMEOUT_S", "5.0"))
+
+
+def migrate_retries() -> int:
+    """Bounded retry budget per migration beyond the first attempt
+    (``REPRO_MIGRATE_RETRIES``, default 2).  Exhaustion raises the typed
+    ``MigrationFailed``; the disagg router answers with colocated
+    fallback, so retries trade latency for migration reuse — they never
+    trade away the request."""
+    return int(os.environ.get("REPRO_MIGRATE_RETRIES", "2"))
+
+
+def migrate_backoff_s() -> float:
+    """Base backoff between migration retries
+    (``REPRO_MIGRATE_BACKOFF_S``, seconds, default 0.01), doubled per
+    attempt — a transient fault (one injected ``xfer`` hit, a momentary
+    pool squeeze) clears in one cheap beat without hammering the
+    engines."""
+    return float(os.environ.get("REPRO_MIGRATE_BACKOFF_S", "0.01"))
+
+
+def tier_restarts_default() -> int:
+    """Bound on prefill-TIER respawns by ``DisaggServer``
+    (``REPRO_TIER_RESTARTS``, default 2).  Distinct from
+    ``REPRO_MAX_RESTARTS`` (the per-frontend supervisor): the prefill
+    frontend runs with ``max_restarts=0`` so a crash surfaces as a tier
+    outage the router can observe (degraded colocated mode), and the
+    DisaggServer owns the respawn/fail-back cycle up to this bound.
+    Past it the tier stays down and the server keeps serving colocated
+    — degraded forever beats a respawn loop."""
+    return int(os.environ.get("REPRO_TIER_RESTARTS", "2"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

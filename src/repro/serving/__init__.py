@@ -1,11 +1,14 @@
+from repro.serving.disagg import DisaggServer, bind_dp_router  # noqa: F401
 from repro.serving.engine import (Request, ServingEngine,  # noqa: F401
                                   sample_token)
 from repro.serving.errors import (DeadlineExceeded,  # noqa: F401
                                   EngineOverloaded, EngineRestarted,
-                                  RequestCancelled, RequestShed,
-                                  ServingError)
+                                  MigrationFailed, RequestCancelled,
+                                  RequestShed, ServingError)
 from repro.serving.frontend import (AsyncFrontend, AsyncSession,  # noqa: F401
                                     FrontendClosed, PollResult)
+from repro.serving.migrate import (MigrationChannel,  # noqa: F401
+                                   MigrationPayload)
 from repro.serving.paged import (CacheFull, PagedKVCache,  # noqa: F401
                                  blocks_for)
 from repro.serving.pd_sim import ServingConfig, Workload, simulate  # noqa: F401

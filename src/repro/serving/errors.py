@@ -22,7 +22,14 @@ string-matching a RuntimeError:
   * ``EngineRestarted``  — the serve loop crashed and the supervisor
     rebuilt the engine: requests whose device state died with it fail
     with this, while un-started waiting requests are re-queued and never
-    observe the crash.
+    observe the crash;
+  * ``MigrationFailed``  — a KV-block migration between disaggregated
+    tiers could not complete (timeout, injected ``xfer`` fault, version
+    skew, or decode-pool pressure) after its bounded retries.  The
+    disagg router treats it as a ROUTING outcome, not a request outcome:
+    it falls back to colocated prefill on the decode engine, so clients
+    normally never see this type — it surfaces only when the
+    ``MigrationChannel`` is driven directly.
 
 All subclass ``ServingError`` (itself a ``RuntimeError``), so "any
 fault-tolerance outcome" is one ``except`` clause.  The terminal state
@@ -56,3 +63,10 @@ class DeadlineExceeded(ServingError):
 
 class EngineRestarted(ServingError):
     """A supervisor restart lost this request's in-flight state."""
+
+
+class MigrationFailed(ServingError):
+    """A prefill->decode KV-block migration exhausted its retry budget
+    (timeout / injected fault / version skew / pool pressure).  The
+    disagg router degrades to colocated prefill instead of failing the
+    request."""

@@ -119,8 +119,8 @@ class AsyncFrontend:
     def submit(self, prompt: Sequence[int], *, max_new: int = 32,
                temperature: float = 0.0,
                deadline_s: Optional[float] = None,
-               on_finish: Optional[Callable[[Request], None]] = None
-               ) -> int:
+               on_finish: Optional[Callable[[Request], None]] = None,
+               t_submit: Optional[float] = None) -> int:
         """Enqueue one request; returns a handle for poll()/result().
 
         Safe from any thread at any time — the serve thread admits it
@@ -134,13 +134,17 @@ class AsyncFrontend:
         retire the request with ``DeadlineExceeded`` if it cannot finish
         in time.  ``on_finish(req)`` (if given) runs ON THE SERVE THREAD
         right after the request retires successfully, with the engine
-        state consistent — the hook sessions use to pin blocks."""
+        state consistent — the hook sessions use to pin blocks.
+        ``t_submit`` backdates the TTFT/deadline clock to an earlier
+        ``time.perf_counter()`` stamp — the disagg router uses it so a
+        request's time in the prefill tier still counts toward the SLO
+        it resubmits under."""
         req = Request(prompt=np.asarray(prompt, np.int32), max_new=max_new,
                       temperature=temperature, deadline_s=deadline_s)
         # TTFT clock starts HERE, on the caller's thread: time spent in
         # the inbox waiting for the serve thread is real latency the
         # client observes, so it must count toward the SLO
-        req.t_submit = time.perf_counter()
+        req.t_submit = time.perf_counter() if t_submit is None else t_submit
         eng = self.engine
         eng.validate(req)
         with self._work:
@@ -440,6 +444,16 @@ class AsyncFrontend:
                         t.req.error = t.error
                         t.req.status = "failed"
                     t.done.set()
+            # pending call() thunks must fail too, or a caller blocked in
+            # call(wait=True) — e.g. a migration extract racing the crash
+            # — would wait forever on an event no thread will ever set
+            calls, self._calls = self._calls, []
+        for c in calls:
+            c[2] = FrontendClosed(f"serve thread crashed: {e!r}")
+            if c[1] is not None:
+                c[1].set()
+            else:
+                self.callback_errors.append(f"call: dropped by crash {e!r}")
 
     def _harvest(self) -> None:
         """Stream new tokens out of live slots and complete tickets whose

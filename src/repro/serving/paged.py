@@ -133,6 +133,26 @@ class PagedKVCache:
         """Allocated blocks stamped with an older version than current."""
         return sum(1 for v in self._bver.values() if v != self.version)
 
+    def restamp(self, blocks: List[int], version: int) -> None:
+        """Overwrite the version stamp of allocated ``blocks``.
+
+        The migration import path: a block scattered into this pool from
+        a FOREIGN pool holds KV written under the SOURCE engine's
+        weights, so its stamp must be the source's version, not the
+        version current when the destination allocated the landing
+        block.  Preserving the true writer version is what lets the
+        radix tree keep (or refuse) migrated KV correctly across weight
+        pushes.  Monotonicity bounds it at the allocator's current
+        version — KV from the future cannot exist."""
+        bad = [b for b in blocks if b not in self._ref]
+        if bad:
+            raise ValueError(f"restamp: blocks {bad} are not allocated")
+        if version > self.version:
+            raise ValueError(f"restamp: version {version} is ahead of the "
+                             f"allocator's current {self.version}")
+        for b in blocks:
+            self._bver[b] = version
+
     # ------------------------------------------------------------ lifetime
     def alloc(self, n: int) -> List[int]:
         """Pop ``n`` blocks off the free list at refcount 1.

@@ -22,7 +22,10 @@ bench-serving:
 # its measured accept length (byte-identical greedy asserted inside), and
 # async_frontend BOTH prefill-tokens-saved > 0 across straddled weight
 # pushes (the cache must survive a push) and the >=1.2x tok/s bar for
-# multiplexed vs serialized groups.  fault_tolerance ENFORCES the
+# multiplexed vs serialized groups.  tiered_kv ENFORCES the spill-tier
+# bars on a long-tail multi-tenant trace: restored-prefix hits > 0,
+# prefill tokens saved vs spill-off > 0, effective cache capacity above
+# the HBM pool, byte-identical greedy.  fault_tolerance ENFORCES the
 # robustness bars: zero lost requests under an injected overload+fault
 # trace (alloc storms + step exception + serve-loop crash), survivor
 # outputs byte-identical to the fault-free oracle, typed overload/shed
@@ -33,6 +36,7 @@ bench-smoke:
 	rm -f $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only serving_throughput --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only prefix_cache --fast --json $(BENCH_JSON)
+	$(PY) -m benchmarks.run --only tiered_kv --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only paged_decode --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only paged_prefill --fast --json $(BENCH_JSON)
 	$(PY) -m benchmarks.run --only speculative_decode --fast --json $(BENCH_JSON)

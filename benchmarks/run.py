@@ -30,6 +30,8 @@ SUITES = [
     ("pd_disagg", "S3.6.2: PD disaggregation tail latency"),
     ("serving_throughput", "S3.6: continuous vs static batching tok/s"),
     ("prefix_cache", "S3.6: radix prefix cache on agentic workloads"),
+    ("tiered_kv", "S3.6: host-RAM KV spill tier on a long-tail "
+                  "multi-tenant trace"),
     ("paged_decode", "S3.6: in-place paged decode vs full-view gather"),
     ("paged_prefill", "S3.6: in-place paged prefill vs padded-view gather"),
     ("speculative_decode", "S2.1/S3.6: MTP spec decode through the engine"),

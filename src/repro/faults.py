@@ -34,7 +34,12 @@ Injection points wired in this repo:
   ``beat``      ``HeartbeatMonitor.beat``               beat swallowed (a
                                                         lapsing server)
   ``xfer``      ``MigrationChannel.migrate``            KV-block migration
-                                                        attempt fails
+                                                        attempt fails;
+                                                        ``=x`` stalls the
+                                                        install half x
+                                                        seconds instead
+                                                        (whole-attempt
+                                                        timeout trips)
                                                         (router retries,
                                                         then degrades to
                                                         colocated)

@@ -186,6 +186,29 @@ def tier_restarts_default() -> int:
     return int(os.environ.get("REPRO_TIER_RESTARTS", "2"))
 
 
+def spill_enabled() -> bool:
+    """Process-wide default for the host-RAM KV spill tier
+    (``REPRO_SPILL_ENABLE``).  ``1``/``true``/``yes`` makes every
+    newly-constructed prefix-cached ``ContinuousEngine`` attach a
+    ``HostSpillTier`` (``repro.serving.spill``): the radix tree's LRU
+    evictor DEMOTES cold leaves to pinned host memory instead of
+    forgetting them, and ``PrefixCache.match`` restores spilled prefixes
+    on a hit — effective cache capacity beyond HBM.  Spill is byte-exact
+    (greedy outputs are byte-identical with the tier on or off).  An
+    explicit ``ContinuousEngine(spill=...)`` always wins."""
+    return os.environ.get("REPRO_SPILL_ENABLE",
+                          "0").lower() in ("1", "true", "yes")
+
+
+def spill_blocks() -> int:
+    """Capacity of the host spill tier in BLOCKS (``REPRO_SPILL_BLOCKS``,
+    default 512).  Beyond it the OLDEST spilled entry is dropped
+    (``spill.dropped_capacity``) — host memory is a bigger tier, not an
+    unbounded one.  ``<= 0`` means unbounded (tests only).  An explicit
+    ``ContinuousEngine(spill_blocks=...)`` always wins."""
+    return int(os.environ.get("REPRO_SPILL_BLOCKS", "512"))
+
+
 def paged_prefill_impl() -> str:
     """Default PREFILL impl for the paged-attention ops ('pallas' | 'ref').
 

@@ -15,4 +15,5 @@ from repro.serving.pd_sim import ServingConfig, Workload, simulate  # noqa: F401
 from repro.serving.prefix_cache import PrefixCache  # noqa: F401
 from repro.serving.scheduler import ContinuousEngine  # noqa: F401
 from repro.serving.session import AgentSession  # noqa: F401
+from repro.serving.spill import HostSpillTier  # noqa: F401
 from repro.serving.speculative import measure_accept_length  # noqa: F401

@@ -22,8 +22,12 @@ tier into the decode tier is
      ownership to the decode engine's prefix cache via ``insert``.
 
 ``migrate`` wraps the two halves in the robustness contract: a
-deterministic ``xfer`` fault point (``repro.faults``), a per-attempt
-wall-clock timeout, bounded retries with exponential backoff, and a
+deterministic ``xfer`` fault point (``repro.faults``; ``=x``
+parameterized means a transfer that STALLS the install half for ``x``
+seconds rather than dying outright), a per-attempt wall-clock timeout
+bounding the WHOLE attempt — checked after extract AND after install,
+so a wedged destination trips it too — bounded retries with
+exponential backoff, and a
 typed ``MigrationFailed`` when the budget is exhausted — which the
 disagg router (``repro.serving.disagg``) answers by falling back to
 colocated prefill, so a dead transfer path degrades throughput, never
@@ -232,9 +236,11 @@ class MigrationChannel:
     # ------------------------------------------------------------- migrate
     def migrate(self, tokens: Sequence[int]) -> List[int]:
         """Extract + install with the full robustness contract: ``xfer``
-        fault injection, per-attempt timeout, bounded retries with
-        exponential backoff.  Returns the landing block ids; raises
-        ``MigrationFailed`` once the retry budget is spent."""
+        fault injection, a WHOLE-attempt timeout (extract + install —
+        a destination install that wedges trips it, not just a slow
+        extract), bounded retries with exponential backoff.  Returns
+        the landing block ids; raises ``MigrationFailed`` once the
+        retry budget is spent."""
         reg, tr = self.registry, self.tracer
         last: Optional[Exception] = None
         for attempt in range(self.max_retries + 1):
@@ -244,16 +250,18 @@ class MigrationChannel:
             t0 = time.perf_counter()
             tr.begin("xfer", attempt=attempt, tokens=len(tokens))
             try:
+                stall = 0.0
                 if self.faults is not None and self.faults.enabled \
                         and self.faults.fires("xfer"):
-                    # a stalled/failed transfer: optionally burn wall
-                    # clock first (=x seconds) so timeouts are exercised
                     stall = self.faults.param("xfer", 0.0)
-                    if stall > 0:
-                        time.sleep(stall)
-                    raise MigrationFailed(
-                        f"injected xfer fault "
-                        f"(call {self.faults.calls['xfer'] - 1})")
+                    if stall <= 0:
+                        raise MigrationFailed(
+                            f"injected xfer fault "
+                            f"(call {self.faults.calls['xfer'] - 1})")
+                    # =x parameterized: a STALLED destination transfer,
+                    # not a dead one — the install half wedges for x
+                    # seconds and must be failed by the whole-attempt
+                    # timeout check below, never by an eager raise here
                 payload = self._run_src(lambda: self.extract(tokens))
                 if time.perf_counter() - t0 > self.timeout_s:
                     # nothing installed yet: the attempt is cleanly
@@ -261,7 +269,24 @@ class MigrationChannel:
                     raise MigrationFailed(
                         f"migration attempt {attempt} exceeded "
                         f"{self.timeout_s}s before install")
-                blocks = self._run_dst(lambda: self.install(payload))
+
+                def _install():
+                    if stall > 0:
+                        time.sleep(stall)
+                    return self.install(payload)
+
+                blocks = self._run_dst(_install)
+                if time.perf_counter() - t0 > self.timeout_s:
+                    # the attempt wedged INSIDE install.  The install
+                    # itself landed, so nothing leaks — the destination
+                    # tree owns the blocks and a retry dedupes through
+                    # insert() — but the ATTEMPT is declared failed:
+                    # callers sized their latency budget to timeout_s,
+                    # and an attempt that blew it must consume a retry
+                    # exactly like one that died before install.
+                    raise MigrationFailed(
+                        f"migration attempt {attempt} exceeded "
+                        f"{self.timeout_s}s (stalled install)")
             except Exception as e:      # noqa: BLE001 - retried, typed below
                 last = e
                 tr.end("xfer", error=repr(e))

@@ -23,7 +23,14 @@ here).
 
 When the free list runs dry ``alloc`` asks an optional ``evictor`` (the
 prefix cache's LRU) to release cached, unreferenced blocks before giving
-up with ``CacheFull``.
+up with ``CacheFull``.  The evictor protocol has a second, optional half:
+``demote_hook`` — registered by a spill tier (``repro.serving.spill``),
+called by the evictor with a victim's token path, block id, and version
+stamp JUST BEFORE the block is released under allocation pressure, so the
+block's bytes can be gathered to host memory first (eviction becomes
+"demote", not "forget").  The hook is advisory: it must not allocate from
+or mutate this pool, and eviction proceeds identically whether or not it
+is registered (the tier only ADDS a place the bytes survive).
 
 Blocks are also VERSION-TAGGED: the allocator carries a monotonically
 increasing weight ``version`` (bumped by ``set_version`` when the engine
@@ -88,6 +95,12 @@ class PagedKVCache:
         # Called with the shortfall when alloc cannot be satisfied; should
         # release() cached blocks and return how many it let go.
         self.evictor: Optional[Callable[[int], int]] = None
+        # The evictor protocol's demote half: called by the evictor with
+        # (token_path, block, version) just before a cached block is
+        # released under pressure.  A spill tier registers here to gather
+        # the block's bytes to host memory first; None = evict-as-forget.
+        self.demote_hook: Optional[
+            Callable[[tuple, int, int], bool]] = None
         # weight version stamped onto blocks at alloc time (the version of
         # the weights that write their KV, under the drain-barrier push
         # protocol); bumped by set_version on an applied weight push
@@ -180,7 +193,12 @@ class PagedKVCache:
     def retain(self, blocks: List[int]) -> None:
         """Add one reference to each block (aliasing a shared prefix).
 
-        Atomic: validates the whole batch before mutating."""
+        Atomic: validates the whole batch before mutating.  A block may
+        appear at most once per call — the same validation ``release``
+        and ``free`` apply, so a buggy caller cannot create references
+        in one call that ``release`` then refuses to drop in one call."""
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in retain(): {blocks}")
         bad = [b for b in blocks if b not in self._ref]
         if bad:
             raise ValueError(f"retain: blocks {bad} are not allocated")

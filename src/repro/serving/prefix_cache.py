@@ -53,6 +53,19 @@ the cache leans on the allocator's block version stamps
 Because ``insert`` walks root-first, every fresh node's ancestors are
 fresh, so ``match``'s stop-at-first-stale walk never misses a reachable
 current-version prefix.
+
+Spill tier (``repro.serving.spill.HostSpillTier``, optional): with a
+tier attached, ``evict`` DEMOTES a cold full-block leaf — the allocator's
+``demote_hook`` gathers its bytes to host memory, keyed by the node's
+token path — before releasing the block, and ``match`` consults the tier
+on a child miss: the longest spilled chain extending the matched path is
+restored (landing blocks allocated, ONE donated scatter, restamped to
+the writer version) and grafted back into the tree, so the walk
+continues through it exactly like a warm hit.  Stale spilled entries are
+dropped at lookup, never restored, so the version contract above is
+unchanged.  Partial (tail) leaves are not demoted — a partial restore
+could only ever seed a COW fork, and the tier keys on exact full-block
+paths.
 """
 from __future__ import annotations
 
@@ -100,6 +113,9 @@ class PrefixCache:
              "inserted_blocks", "deduped_blocks", "version_refused",
              "refreshed_blocks", "stale_evictions"])
         kv.evictor = self.evict
+        # host spill tier (repro.serving.spill); set by HostSpillTier
+        # .attach — None means evict-as-forget (the pre-tier behavior)
+        self.spill = None
 
     # ------------------------------------------------------------- queries
     @property
@@ -142,8 +158,14 @@ class PrefixCache:
         L = len(tokens) if limit is None else min(limit, len(tokens))
         node, m = self.root, 0
         blocks: List[int] = []
+        refused: Optional[_Node] = None
         while m + bs <= L:
             child = node.children.get(tuple(int(t) for t in tokens[m:m + bs]))
+            if child is None and self.spill is not None:
+                # spilled-prefix hit: restore the longest spilled chain
+                # extending tokens[:m] into fresh blocks and graft it
+                # back into the tree — the walk continues through it
+                child = self._restore_from_spill(node, tokens, m, L)
             if child is None:
                 break
             if not self._fresh(child):
@@ -151,8 +173,14 @@ class PrefixCache:
                 # newer forward — the caller re-prefills from here and
                 # insert() will refresh the stale path on retire
                 self.stats["version_refused"] += 1
+                refused = child
                 break
             node = child
+            # retain AS the walk advances (not in one batch at the end):
+            # a spill restore later in this walk allocates blocks, and
+            # that allocation's eviction pressure must never reclaim a
+            # block this match has already promised to the caller
+            self.kv.retain([node.block])
             blocks.append(node.block)
             m += bs
             self._touch(node)
@@ -163,19 +191,71 @@ class PrefixCache:
         if rest:
             for key, child in node.children.items():
                 k = _common_prefix(key, rest)
-                if k > best_k and self._fresh(child):
+                if k == 0:
+                    continue
+                if not self._fresh(child):
+                    # a stale child refused mid-block counts exactly like
+                    # the full-block walk's refusal — the telemetry must
+                    # not undercount the partial-overlap case (but one
+                    # node refused in BOTH phases counts once per match)
+                    if child is not refused:
+                        self.stats["version_refused"] += 1
+                    continue
+                if k > best_k:
                     best, best_k = child, k
         if best is not None:
+            self.kv.retain([best.block])
             blocks.append(best.block)
             m += best_k
             self._touch(best)
         if blocks:
-            self.kv.retain(blocks)
             self.stats["hits"] += 1
         else:
             self.stats["misses"] += 1
         self.stats["matched_tokens"] += m
         return m, blocks
+
+    def _restore_from_spill(self, node: _Node, tokens: Sequence[int],
+                            m: int, L: int) -> Optional[_Node]:
+        """Restore the longest spilled chain extending ``tokens[:m]``.
+
+        Collects consecutive full-block spill entries (each keyed by its
+        full token path; ``lookup`` drops stale ones), allocates landing
+        blocks — under pressure that allocation may itself demote colder
+        leaves, which is exactly the tiering policy — scatters the host
+        bytes back with one donated jit, and grafts the re-created nodes
+        under ``node``.  Returns the first grafted node (the walk resumes
+        through it) or None when nothing restorable is spilled or the
+        pool cannot land the chain (treated as an ordinary miss)."""
+        from repro.serving.paged import CacheFull
+        bs = self.block_size
+        keyed: List[tuple] = []
+        mm = m
+        while mm + bs <= L:
+            path = tuple(int(t) for t in tokens[:mm + bs])
+            ent = self.spill.lookup(path)
+            if ent is None:
+                break
+            keyed.append((path, ent))
+            mm += bs
+        if not keyed:
+            return None
+        try:
+            landing = self.kv.alloc(len(keyed))
+        except CacheFull:
+            return None         # pool cannot land the chain: plain miss
+        self.spill.restore(keyed, landing)
+        first: Optional[_Node] = None
+        cur = node
+        for (path, _), block in zip(keyed, landing):
+            key = path[len(path) - bs:]
+            child = _Node(key, block, cur)
+            cur.children[key] = child
+            self._touch(child)
+            if first is None:
+                first = child
+            cur = child
+        return first
 
     # -------------------------------------------------------------- insert
     def insert(self, tokens: Sequence[int], blocks: List[int]) -> None:
@@ -236,6 +316,17 @@ class PrefixCache:
         self.stats["refreshed_blocks"] += 1
 
     # ------------------------------------------------------------ eviction
+    def _path(self, node: _Node) -> Tuple[int, ...]:
+        """Full token path root -> ``node`` (the spill tier's key)."""
+        keys = []
+        while node.parent is not None:
+            keys.append(node.key)
+            node = node.parent
+        out: List[int] = []
+        for k in reversed(keys):
+            out.extend(k)
+        return tuple(out)
+
     def _evictable(self, node: _Node) -> bool:
         return (node.parent is not None
                 and node.parent.children.get(node.key) is node
@@ -274,6 +365,14 @@ class PrefixCache:
             del parent.children[victim.key]
             if not self._fresh(victim):
                 self.stats["stale_evictions"] += 1
+            elif self.kv.demote_hook is not None \
+                    and victim.length == self.block_size:
+                # demote instead of forget: the spill tier gathers the
+                # block's bytes to host before the release frees it
+                # (stale victims skip this — they could never be
+                # restored; partial tails key on nothing restorable)
+                self.kv.demote_hook(self._path(victim), victim.block,
+                                    self.kv.block_version(victim.block))
             self.kv.release([victim.block])
             freed += 1
             self.stats["evictions"] += 1

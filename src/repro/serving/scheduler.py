@@ -166,6 +166,8 @@ class ContinuousEngine:
                  tracer: Optional[Tracer] = None,
                  max_waiting: Optional[int] = None,
                  admit_hol_window: Optional[int] = None,
+                 spill: Optional[bool] = None,
+                 spill_blocks: Optional[int] = None,
                  faults: Optional[FaultInjector] = None):
         if cfg.family not in ("dense", "moe", "vlm", "hybrid"):
             raise NotImplementedError(
@@ -207,7 +209,8 @@ class ContinuousEngine:
         # defaults to the process-wide REPRO_TRACE switch and is a no-op
         # (single attribute check, no buffer growth) when disabled
         from repro.flags import (admit_steps_window, admit_window,
-                                 max_waiting_default, trace_enabled)
+                                 max_waiting_default, spill_enabled,
+                                 trace_enabled)
         self.registry = registry if registry is not None else MetricsRegistry()
         self.tracer = tracer if tracer is not None \
             else Tracer(enabled=trace_enabled())
@@ -249,6 +252,12 @@ class ContinuousEngine:
         # crash (``respawn``) — geometry and policy, all RESOLVED values
         # so a respawn is deterministic even if env flags change later.
         # Params/weight_version are taken from live state at respawn time.
+        # host-RAM spill tier for the radix cache (the KV memory
+        # hierarchy's lever 2): resolve the env default NOW so respawn
+        # is deterministic; the tier itself attaches after the pool
+        # exists below
+        self._spill_on = spill_enabled() if spill is None else bool(spill)
+        self._spill_blocks = spill_blocks
         self._init_kw = dict(
             max_batch=max_batch, block_size=block_size,
             num_blocks=num_blocks, max_len=max_len, seed=seed,
@@ -257,7 +266,8 @@ class ContinuousEngine:
             spec_steps=spec_steps, true_logprobs=true_logprobs,
             step_token_budget=step_token_budget,
             max_waiting=0 if self.max_waiting is None else self.max_waiting,
-            admit_hol_window=self.admit_hol_window)
+            admit_hol_window=self.admit_hol_window,
+            spill=self._spill_on, spill_blocks=spill_blocks)
         self.prefill_chunk = prefill_chunk
         self.capture_logprobs = capture_logprobs
         self.hybrid = cfg.family == "hybrid"
@@ -274,6 +284,16 @@ class ContinuousEngine:
         else:
             self.pool, _ = self.model.init_paged_cache(cfg, num_blocks + 1,
                                                        block_size, dtype)
+        # lever 2 of the KV memory hierarchy: demote-instead-of-forget.
+        # Needs both a radix tree (to key entries by token path) and the
+        # pool built above (restores scatter into it); hybrid/cache-off
+        # engines have neither, so they get no tier.
+        self.spill_tier = None
+        if self._spill_on and self.prefix is not None:
+            from repro.serving.spill import HostSpillTier
+            self.spill_tier = HostSpillTier(
+                self, capacity_blocks=self._spill_blocks)
+            self.spill_tier.attach(self.prefix)
         self.tables = np.full((max_batch, self.table_width), self.trash,
                               np.int32)
         self.lengths = np.zeros((max_batch,), np.int32)
@@ -638,6 +658,8 @@ class ContinuousEngine:
         do NOT need this — see ``push_weights``)."""
         if self.prefix is not None:
             self.prefix.clear()
+        if self.spill_tier is not None:
+            self.spill_tier.clear()
 
     @property
     def busy(self) -> bool:
@@ -656,6 +678,15 @@ class ContinuousEngine:
         reclamation (0 when the prefix cache is off)."""
         return self.prefix.stale_cached_blocks \
             if self.prefix is not None else 0
+
+    @property
+    def spilled_blocks(self) -> int:
+        """Blocks resident in the host spill tier (0 when spill is off).
+        ``cached_blocks + spilled_blocks`` is the engine's EFFECTIVE
+        prefix-cache capacity — the tier's whole point is letting it
+        exceed the HBM pool."""
+        return self.spill_tier.spilled_blocks \
+            if self.spill_tier is not None else 0
 
     # --------------------------------------------------------------- retire
     def _retire(self) -> None:

@@ -1,0 +1,243 @@
+"""Host-RAM spill tier for the radix prefix cache: demote, don't forget.
+
+GLM-5's agentic serving posture (§3.6) assumes millions of long-horizon
+sessions whose shared prefixes far outlive HBM: the radix tree's LRU
+evictor reclaims cold prefixes under allocation pressure, and without a
+second tier every reclaimed block means a future request re-prefills
+tokens the engine already computed once — exactly the redundant
+shared-prefix prefill GLM-4.5 showed dominates agentic RL rollouts.
+``HostSpillTier`` turns eviction from "forget" into "demote":
+
+* **Demote** (the allocator's ``demote_hook``, fired by
+  ``PrefixCache.evict`` just before a cold leaf's block is released):
+  gather the block's per-layer-group pool slices to host memory — the
+  same per-leaf row gather ``MigrationChannel.extract`` stages payloads
+  with — keyed by the radix node's full TOKEN PATH and stamped with the
+  block's weight version.  The gather runs on the serve thread (the
+  evictor fires inside ``PagedKVCache.alloc`` during admission), so the
+  pool is never read mid-scatter.
+* **Restore** (``PrefixCache.match`` on a spilled-prefix hit): allocate
+  landing blocks, scatter the host bytes back with ONE donated
+  power-of-two-padded jit over the whole pool pytree (pad lanes target
+  the trash row — ``MigrationChannel.install``'s machinery), ``restamp``
+  the landing blocks to the entry's writer version, and hand the
+  re-created nodes to the radix tree — admission then aliases them
+  exactly like a warm hit.
+
+Spill is BYTE-EXACT: the host round trip is a gather + scatter of the
+raw pool rows, no quantization, so every greedy byte-parity oracle holds
+with the tier enabled (int8-quantized pools are the ROADMAP's separate
+lever 1).
+
+Weight-version contract (the PR-6 staleness refusal, extended across the
+tier boundary): an entry carries the version of the weights that WROTE
+its KV.  A lookup whose entry is stale (a weight push landed since the
+demote) DROPS the entry — ``spill.dropped_stale`` — and reports a miss;
+stale KV is never restored, so the radix tree's invariant "every
+matchable block is current-version" survives demote/restore cycles.
+Entries that were already stale at eviction time are never demoted at
+all (they could never be restored).
+
+Capacity: bounded in blocks (``REPRO_SPILL_BLOCKS``); past the bound the
+OLDEST spilled entry is dropped (``spill.dropped_capacity``) — host
+memory is a bigger tier, not an unbounded one.  Re-demoting an existing
+key refreshes the entry in place (newest bytes win).
+
+Obs: ``spill.demotions`` / ``spill.restores`` / ``spill.dropped_stale``
+/ ``spill.dropped_capacity`` counters, ``spill.restore_ms`` /
+``spill.bytes`` histograms, and ``spill.blocks`` / ``spill.capacity``
+gauges — all in the engine's registry, next to the prefill tokens the
+tier saves.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+
+# spill payloads are bytes, not milliseconds: decade buckets 64 KiB..64 MiB
+_BYTES_BUCKETS = [2.0 ** p for p in range(16, 27)]
+
+
+class _SpillEntry:
+    """One demoted block: per-pool-leaf host arrays shaped
+    ``(L, block_size, *feat)``, the weight version that wrote the KV,
+    and the byte count (accounting only)."""
+    __slots__ = ("leaves", "version", "nbytes")
+
+    def __init__(self, leaves: List[np.ndarray], version: int):
+        self.leaves = leaves
+        self.version = version
+        self.nbytes = sum(a.nbytes for a in leaves)
+
+
+class HostSpillTier:
+    """Second KV-cache tier: cold radix blocks in pinned host memory.
+
+    ``engine`` is anything with the serving pool contract: ``.kv`` (the
+    ``PagedKVCache`` whose blocks are being demoted/restored) and
+    ``.pool`` (the layer-major device pool, leaves shaped
+    ``(L * (num_blocks + 1), block_size, *feat)``).  ``attach`` wires the
+    tier into a ``PrefixCache`` + allocator pair; everything runs on the
+    thread that owns the engine (its serve thread)."""
+
+    def __init__(self, engine, *, capacity_blocks: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None):
+        from repro.flags import spill_blocks
+        self.engine = engine
+        self.kv = engine.kv
+        cap = spill_blocks() if capacity_blocks is None else capacity_blocks
+        self.capacity_blocks = cap if cap > 0 else None
+        self.registry = registry if registry is not None \
+            else self.kv.registry
+        # insertion-ordered: popitem(last=False) drops the OLDEST entry
+        # under capacity pressure; re-demote refreshes via move_to_end
+        self._entries: "collections.OrderedDict[Tuple[int, ...], \
+_SpillEntry]" = collections.OrderedDict()
+        self.registry.set_gauge("spill.capacity",
+                                0 if self.capacity_blocks is None
+                                else self.capacity_blocks)
+        self._sync_gauges()
+        # restore geometry is fixed for the engine's lifetime: one donated
+        # padded scatter jit per power-of-two block-count bucket, pad
+        # lanes routed to the trash row (duplicate writes are harmless)
+        stride = self.kv.num_blocks + 1
+        self._stride = stride
+        self._trash = self.kv.num_blocks
+
+        def install_fn(pool, blocks, data):
+            def upd(leaf, d):
+                L = leaf.shape[0] // stride
+                rows = (jnp.arange(L, dtype=jnp.int32)[:, None] * stride
+                        + blocks[None, :]).reshape(-1)
+                return leaf.at[rows].set(d.reshape((-1,) + d.shape[2:]))
+            return jax.tree.map(upd, pool, data)
+
+        self._install_jit = jax.jit(install_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------- queries
+    @property
+    def spilled_blocks(self) -> int:
+        return len(self._entries)
+
+    @property
+    def spilled_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    def has(self, path: Tuple[int, ...]) -> bool:
+        return path in self._entries
+
+    def _sync_gauges(self) -> None:
+        self.registry.set_gauge("spill.blocks", len(self._entries))
+
+    # -------------------------------------------------------------- demote
+    def demote(self, path: Tuple[int, ...], block: int,
+               version: int) -> bool:
+        """Gather ``block``'s pool rows to host, keyed by the radix
+        node's token path (registered as ``PagedKVCache.demote_hook``;
+        the caller releases the block afterwards).  Stale blocks are
+        refused — they could never be restored (lookup drops anything
+        older than the allocator's current version), so spilling them
+        would only burn capacity.  Returns True when the entry landed."""
+        if version != self.kv.version:
+            return False
+        t0 = time.perf_counter()
+        leaves: List[np.ndarray] = []
+        for leaf in jax.tree.leaves(self.engine.pool):
+            L = leaf.shape[0] // self._stride
+            rows = jnp.arange(L, dtype=jnp.int32) * self._stride + block
+            leaves.append(np.asarray(leaf[rows]))          # (L, bs, *f)
+        ent = _SpillEntry(leaves, version)
+        self._entries[path] = ent
+        self._entries.move_to_end(path)
+        reg = self.registry
+        reg.inc("spill.demotions")
+        reg.observe("spill.demote_ms", (time.perf_counter() - t0) * 1e3)
+        reg.observe("spill.bytes", float(ent.nbytes),
+                    boundaries=_BYTES_BUCKETS)
+        while self.capacity_blocks is not None \
+                and len(self._entries) > self.capacity_blocks:
+            self._entries.popitem(last=False)       # oldest entry drops
+            reg.inc("spill.dropped_capacity")
+        self._sync_gauges()
+        return True
+
+    # -------------------------------------------------------------- lookup
+    def lookup(self, path: Tuple[int, ...]) -> Optional[_SpillEntry]:
+        """Entry for ``path`` at the CURRENT weight version, or None.
+
+        A stale entry (weight push since demote) is DROPPED here —
+        ``spill.dropped_stale`` — never restored: restoring it would
+        alias pre-push KV into a newer forward, exactly what the radix
+        tree's version refusal exists to prevent."""
+        ent = self._entries.get(path)
+        if ent is None:
+            return None
+        if ent.version != self.kv.version:
+            del self._entries[path]
+            self.registry.inc("spill.dropped_stale")
+            self._sync_gauges()
+            return None
+        return ent
+
+    # ------------------------------------------------------------- restore
+    def restore(self, keyed: List[Tuple[Tuple[int, ...], _SpillEntry]],
+                blocks: List[int]) -> None:
+        """Scatter a chain of spilled entries into landing ``blocks``
+        (already allocated by the caller, position order) with ONE
+        donated padded jit, restamp them to the writer version, and
+        consume the entries.  MUST run on the engine's owning thread."""
+        assert keyed and len(keyed) == len(blocks)
+        t0 = time.perf_counter()
+        n = len(blocks)
+        n_pad = 1 << (n - 1).bit_length() if n > 1 else 1
+        bl = np.full((n_pad,), self._trash, np.int32)
+        bl[:n] = blocks
+        pool = self.engine.pool
+        data = []
+        for li, leaf in enumerate(jax.tree.leaves(pool)):
+            # (L, n, bs, *f): the chain's per-leaf host rows, stacked in
+            # position order then padded to the bucket width
+            host = np.stack([ent.leaves[li] for _, ent in keyed], axis=1)
+            if n_pad > n:
+                pad = np.zeros((host.shape[0], n_pad - n)
+                               + host.shape[2:], host.dtype)
+                host = np.concatenate([host, pad], axis=1)
+            data.append(jnp.asarray(host))
+        flat, treedef = jax.tree.flatten(pool)
+        version = keyed[0][1].version
+        nbytes = sum(ent.nbytes for _, ent in keyed)
+        self.engine.pool = self._install_jit(
+            pool, jnp.asarray(bl), jax.tree.unflatten(treedef, data))
+        self.kv.restamp(blocks, version)
+        for path, _ in keyed:
+            self._entries.pop(path, None)           # moved back to HBM
+        reg = self.registry
+        reg.inc("spill.restores")
+        reg.inc("spill.restored_blocks", n)
+        reg.observe("spill.restore_ms", (time.perf_counter() - t0) * 1e3)
+        reg.observe("spill.restored_bytes", float(nbytes),
+                    boundaries=_BYTES_BUCKETS)
+        self._sync_gauges()
+
+    # ------------------------------------------------------------- wiring
+    def attach(self, prefix) -> None:
+        """Wire the tier into a ``PrefixCache`` / allocator pair: the
+        allocator's ``demote_hook`` feeds demotions, the tree's
+        ``spill`` attribute drives restores inside ``match``."""
+        if prefix.kv is not self.kv:
+            raise ValueError("spill tier and prefix cache must share one "
+                             "allocator")
+        self.kv.demote_hook = self.demote
+        prefix.spill = self
+
+    def clear(self) -> None:
+        """Drop every spilled entry (benchmark hygiene, engine respawn)."""
+        self._entries.clear()
+        self._sync_gauges()

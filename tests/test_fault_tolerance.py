@@ -504,7 +504,8 @@ def _prop_engine():
 
 
 _OPS = st.lists(st.tuples(st.sampled_from(
-    ["submit", "expired", "cancel", "push", "pin", "unpin", "step"]),
+    ["submit", "expired", "cancel", "push", "pin", "unpin", "step",
+     "retain_dup"]),
     st.integers(min_value=0, max_value=7)), min_size=1, max_size=14)
 
 
@@ -543,6 +544,18 @@ def test_property_pool_integrity_under_interleavings(ops):
                 pass
         elif op == "unpin" and pins:
             eng.kv.release(pins.pop(arg % len(pins)))
+        elif op == "retain_dup":
+            # retain() must reject duplicates ATOMICALLY — the same
+            # validation release()/free() apply — leaving every
+            # refcount untouched (conservation cannot be broken by a
+            # buggy aliasing caller)
+            held = sorted(eng.kv._ref)
+            if held:
+                b = held[arg % len(held)]
+                before = eng.kv.refcount(b)
+                with pytest.raises(ValueError):
+                    eng.kv.retain([b, b])
+                assert eng.kv.refcount(b) == before
         elif op == "step" and eng.busy:
             eng.step()
     _drain(eng)

@@ -245,6 +245,38 @@ def test_migrate_failure_paths_typed_and_conserved():
     _pool_conserved(dst)
 
 
+def test_migrate_whole_attempt_timeout_covers_stalled_install():
+    """Regression: the per-attempt timeout used to be checked only
+    BETWEEN extract and install, so a destination install that wedged
+    never tripped it — migrate() reported success however long the
+    install stalled.  The timeout now bounds the WHOLE attempt: the
+    ``xfer=x`` stall lands on the install half and must still fail."""
+    src, dst = _engine(), _engine()
+    tokens = _prompt(11, 24)
+    _prefill(src, tokens)
+    # warm the extract gather so it fits WELL inside the budget (the
+    # old between-halves check passes); the transfer then wedges INSIDE
+    # install for 0.6s against a 0.25s whole-attempt budget
+    MigrationChannel(src, dst, max_retries=0,
+                     faults=FaultInjector("")).migrate(tokens)
+    ch = MigrationChannel(src, dst, max_retries=0, timeout_s=0.25,
+                          backoff_s=0.0,
+                          faults=FaultInjector("xfer@0=0.6"))
+    with pytest.raises(MigrationFailed, match="stalled install"):
+        ch.migrate(tokens)
+    assert ch.registry.counter("disagg.migration_failures") == 1
+    # the install itself landed before the deadline check fired, and
+    # its blocks are owned by the destination TREE — nothing leaks, and
+    # a fresh attempt dedupes through insert()
+    _pool_conserved(src)
+    _pool_conserved(dst)
+    ch2 = MigrationChannel(src, dst, max_retries=0,
+                           faults=FaultInjector(""))
+    assert ch2.migrate(tokens)
+    _pool_conserved(src)
+    _pool_conserved(dst)
+
+
 def test_migrate_version_skew_refused_both_directions():
     src, dst = _engine(), _engine()
     tokens = _prompt(5, 40)
